@@ -1,0 +1,246 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (assignment deliverable (d)).
+
+  table1_coverage    — paper Table I:   attribute coverage of discovery
+  table3_validation  — paper Table III: discovered vs ground truth
+  fig2_reduction     — paper Fig. 2:    eq.2 reduction + K-S change point
+  runtime_breakdown  — paper §V-A:      per-family probe run times
+  fig5_stream        — paper Fig. 5:    stream ns/B vs size, LLC boundary
+  perfmodel          — paper §VI-A:     CWP/MWP verdicts from discovery
+  roofline           — deliverable (g): per-cell terms from dry-run artifacts
+  kernels            — Pallas kernels vs refs (correctness + ref wall time)
+  train_step         — tiny end-to-end train step wall time
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def row(name: str, us: float, derived: str) -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timed(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)
+    best = np.inf
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter_ns()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter_ns() - t0)
+    return out, best / 1e3
+
+
+# ----------------------------------------------------------- paper tables
+def bench_table1_coverage() -> None:
+    """Attribute coverage on the simulated H100 (paper Table I)."""
+    from repro.core import discover_sim, make_h100_like
+
+    t0 = time.perf_counter_ns()
+    topo, _ = discover_sim(make_h100_like(seed=42), n_samples=17)
+    us = (time.perf_counter_ns() - t0) / 1e3
+    covered = total = 0
+    for me in topo.memory:
+        for attr in ("size", "load_latency", "line_size", "fetch_granularity",
+                     "amount"):
+            if me.kind == "cache" or attr in ("size", "load_latency"):
+                total += 1
+                covered += me.get(attr) is not None
+    row("table1_coverage", us, f"{covered}/{total}_attrs")
+
+
+def bench_table3_validation() -> None:
+    """Discovered values vs simulated ground truth (paper Table III)."""
+    from repro.core import discover_sim, make_h100_like, make_mi210_like
+
+    for make, name in ((make_h100_like, "h100"), (make_mi210_like, "mi210")):
+        dev = make(seed=43)
+        t0 = time.perf_counter_ns()
+        topo, _ = discover_sim(dev, n_samples=17)
+        us = (time.perf_counter_ns() - t0) / 1e3
+        gt = dev.ground_truth()
+        ok = bad = 0
+        for lvl, truth in gt.items():
+            me = topo.find_memory(lvl)
+            if me is None:
+                continue
+            for attr, want in truth.items():
+                if attr in ("physical_group", "scope"):
+                    continue
+                got = me.get(attr if attr != "latency" else "load_latency")
+                if got is None:
+                    continue
+                tol = 0.1 if attr in ("size", "latency") else 0.0
+                good = (abs(got - want) <= tol * want) if tol else got == want
+                ok += bool(good)
+                bad += not good
+        row(f"table3_validation_{name}", us, f"{ok}ok_{bad}bad")
+
+
+def bench_fig2_reduction() -> None:
+    """eq.2 reduction + K-S change point on a size sweep (paper Fig. 2)."""
+    from repro.core import make_h100_like
+    from repro.core.probes import SimRunner, find_size
+
+    runner = SimRunner(make_h100_like(seed=44))
+    res, us = _timed(find_size, runner, "L1", repeats=1, n_samples=17)
+    row("fig2_reduction", us,
+        f"size={res.size}B_conf={res.confidence:.2f}_pts={res.reduced.size}")
+
+
+def bench_runtime_breakdown() -> None:
+    """Per-family probe run times (paper §V-A)."""
+    from repro.core import discover_sim, make_h100_like
+
+    _, timings = discover_sim(make_h100_like(seed=45), n_samples=17)
+    for fam, secs in sorted(timings.per_family.items()):
+        row(f"runtime_{fam}", secs * 1e6, f"{secs/timings.total:.1%}_of_total")
+
+
+def bench_fig5_stream() -> None:
+    """Stream ns/B vs array size on the host; detect the cache boundary
+    (paper Fig. 5). The transition on a shared VM is gradual, so the
+    parametric PELT segmentation (one of the paper's 'other algorithms')
+    locates the mean shift on the short series."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.stats import pelt_segments
+
+    sizes = [1 << s for s in range(19, 27)]        # 512 KiB .. 64 MiB
+    ns_per_b = []
+    t0 = time.perf_counter_ns()
+    for n in sizes:
+        x = jnp.arange(n // 4, dtype=jnp.float32)
+        f = jax.jit(jnp.sum)
+        f(x).block_until_ready()                   # warm-up
+        reps = max(3, (1 << 24) // n)
+        t1 = time.perf_counter_ns()
+        for _ in range(reps):
+            f(x).block_until_ready()
+        dt = (time.perf_counter_ns() - t1) / reps
+        ns_per_b.append(dt / n)
+    us = (time.perf_counter_ns() - t0) / 1e3
+    cps = pelt_segments(np.asarray(ns_per_b))
+    boundary = sizes[cps[0] - 1] if cps else -1
+    row("fig5_stream", us, f"cache_boundary={boundary}B_ncps={len(cps)}")
+
+
+def bench_perfmodel() -> None:
+    """CWP/MWP verdicts with MT4G-discovered parameters (paper §VI-A)."""
+    from repro.core import discover_sim, make_h100_like
+    from repro.core.perfmodel import (AppParams, evaluate,
+                                      gpu_params_from_topology)
+
+    topo, _ = discover_sim(make_h100_like(seed=46), n_samples=9)
+    gpu = gpu_params_from_topology(topo)
+    stream_app = AppParams(comp_cycles=20, mem_cycles=4000, loads_per_warp=32,
+                           active_warps_per_sm=48)
+    gemm_app = AppParams(comp_cycles=8000, mem_cycles=400, loads_per_warp=2,
+                         active_warps_per_sm=48)
+    r1, us = _timed(evaluate, stream_app, gpu, repeats=3)
+    r2 = evaluate(gemm_app, gpu)
+    row("perfmodel", us,
+        f"stream_membound={r1.memory_bound}_gemm_membound={r2.memory_bound}")
+
+
+def bench_link_adjacency() -> None:
+    """Pod-level §IV-H analogue: recover a 4x8 torus's direct ICI links."""
+    from repro.core.probes.adjacency import SimPod, find_link_adjacency
+
+    pod = SimPod(rows=4, cols=8, seed=47)
+    res, us = _timed(find_link_adjacency, pod, repeats=1, n_samples=9)
+    correct = sum(res.neighbors[c] == pod.neighbors(c)
+                  for c in range(pod.n_chips))
+    row("link_adjacency", us,
+        f"{correct}/{pod.n_chips}_chips_exact_thr={res.threshold_us:.2f}us")
+
+
+# ------------------------------------------------------------- framework
+def bench_roofline() -> None:
+    """Roofline terms per (arch x shape) from the dry-run artifacts."""
+    from repro.analysis.report import roofline_table
+
+    terms = roofline_table()
+    if not terms:
+        row("roofline", 0.0, "no_artifacts_run_dryrun_first")
+        return
+    for t in terms:
+        row(f"roofline_{t.arch}_{t.shape}", t.step_time_s * 1e6,
+            f"bound={t.bound}_frac={t.roofline_fraction:.3f}_useful="
+            f"{t.useful_ratio:.2f}")
+
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    from repro.kernels.flash_attention import flash_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    want, us_ref = _timed(lambda: np.asarray(ref.attention_ref(q, k, v)))
+    got = np.asarray(flash_attention(q, k, v, block_q=128, block_k=128))
+    err = float(np.max(np.abs(got - want)))
+    row("kernel_flash_attention", us_ref, f"maxerr={err:.1e}_vs_dense_ref")
+
+    r = jax.random.normal(ks[0], (1, 64, 2, 16), jnp.float32)
+    kk = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    vv = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    w = jax.random.uniform(ks[0], (1, 64, 2, 16), jnp.float32, 0.1, 0.95)
+    u = jax.random.normal(ks[1], (2, 16), jnp.float32)
+    (want_y, _), us_ref = _timed(lambda: ref.wkv6_ref(r, kk, vv, w, u))
+    got_y, _ = ops.wkv6(r, kk, vv, w, u, chunk=16)
+    err = float(np.max(np.abs(np.asarray(got_y) - np.asarray(want_y))))
+    row("kernel_wkv6", us_ref, f"maxerr={err:.1e}_vs_scan_ref")
+
+
+def bench_train_step() -> None:
+    import jax
+    from repro.configs import get_config
+    from repro.data import ByteCorpus, DataConfig
+    from repro.models import get_model
+    from repro.train import TrainConfig, init_train_state, make_train_step
+
+    cfg = get_config("internlm2-1.8b").smoke().replace(dtype="float32")
+    model = get_model(cfg)
+    tc = TrainConfig()
+    data = ByteCorpus(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                 global_batch=8))
+    state, _ = init_train_state(model, jax.random.PRNGKey(0), tc)
+    step = jax.jit(make_train_step(model, tc))
+    batch = data.batch_at(0)
+    state, m = step(state, batch)              # compile
+    t0 = time.perf_counter_ns()
+    for i in range(5):
+        state, m = step(state, data.batch_at(i + 1))
+    jax.block_until_ready(state)
+    us = (time.perf_counter_ns() - t0) / 5e3
+    row("train_step_smoke", us, f"loss={float(m['loss']):.3f}")
+
+
+def main() -> None:
+    for fn in (bench_table1_coverage, bench_table3_validation,
+               bench_fig2_reduction, bench_runtime_breakdown,
+               bench_fig5_stream, bench_perfmodel, bench_link_adjacency,
+               bench_roofline, bench_kernels, bench_train_step):
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            row(fn.__name__, 0.0, f"ERROR_{type(e).__name__}_{e}")
+
+
+if __name__ == "__main__":
+    main()

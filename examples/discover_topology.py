@@ -1,0 +1,50 @@
+"""MT4G-equivalent CLI: discover and report a device topology.
+
+    PYTHONPATH=src python examples/discover_topology.py --device sim-h100 -j out.json
+    PYTHONPATH=src python examples/discover_topology.py --device host --quick
+
+Mirrors the paper's tool surface: full-suite by default, JSON to stdout,
+optional markdown report, per-family timing like §V-A.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import SIM_DEVICES, discover_host, discover_sim
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device", default="sim-h100",
+                    choices=sorted(SIM_DEVICES) + ["host"])
+    ap.add_argument("--samples", type=int, default=17)
+    ap.add_argument("--elements", nargs="*", default=None,
+                    help="restrict to these memory elements (like mt4g CLI)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("-j", "--json-out", default=None)
+    ap.add_argument("-p", "--markdown", action="store_true")
+    args = ap.parse_args()
+
+    if args.device == "host":
+        topo, timings = discover_host(quick=args.quick)
+    else:
+        dev = SIM_DEVICES[args.device](seed=0)
+        topo, timings = discover_sim(dev, n_samples=args.samples,
+                                     elements=args.elements)
+
+    if args.markdown:
+        print(topo.to_markdown())
+    else:
+        print(topo.dumps())
+    print(f"\n# timings: total {timings.total:.2f}s "
+          f"{ {k: round(v, 3) for k, v in timings.per_family.items()} }",
+          file=sys.stderr)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            f.write(topo.dumps())
+        print(f"# wrote {args.json_out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

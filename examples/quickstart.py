@@ -1,0 +1,50 @@
+"""Quickstart: discover a topology, consult the perf model, train a few steps.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.core import discover_sim, make_v5e_like, spec_from_topology, TPU_V5E
+from repro.core.perfmodel import AppParams, evaluate, gpu_params_from_topology
+from repro.configs import get_config
+from repro.data import ByteCorpus, DataConfig
+from repro.models import get_model
+from repro.train import TrainConfig, train_loop
+
+
+def main() -> None:
+    # 1. MT4G-style auto-discovery (simulated v5e here; HostRunner/TPU on
+    #    real hardware) -> topology report.
+    topo, timings = discover_sim(make_v5e_like(seed=0), n_samples=9)
+    print(topo.to_markdown())
+    print(f"[discovery took {timings.total:.2f}s]")
+
+    # 2. The discovered values parameterize the Hong&Kim perf model (§VI-A).
+    gpu = gpu_params_from_topology(topo)
+    app = AppParams(comp_cycles=200, mem_cycles=3000, loads_per_warp=8,
+                    active_warps_per_sm=16)
+    verdict = evaluate(app, gpu)
+    print(f"perf model: CWP={verdict.cwp:.1f} MWP={verdict.mwp:.1f} "
+          f"memory_bound={verdict.memory_bound}")
+
+    # 3. ... and overlay onto the catalog record the roofline analyzer uses.
+    spec = spec_from_topology(topo, TPU_V5E)
+    print(f"spec: hbm_bw={spec.hbm_bandwidth/1e9:.0f} GB/s "
+          f"(catalog said {TPU_V5E.hbm_bandwidth/1e9:.0f})")
+
+    # 4. Train a tiny model for a few steps on the byte corpus.
+    cfg = get_config("internlm2-1.8b").smoke().replace(dtype="float32")
+    model = get_model(cfg)
+    tc = TrainConfig()
+    data = ByteCorpus(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                 global_batch=8))
+    state, hist = train_loop(model, tc, data, steps=10)
+    print("loss:", " -> ".join(f"{m['loss']:.3f}" for _, m in hist[::3]))
+
+
+if __name__ == "__main__":
+    main()

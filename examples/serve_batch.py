@@ -1,0 +1,52 @@
+"""Serving example: batched requests through prefill + continuous-batching
+decode on a small model.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import Engine, ServeConfig
+
+
+def main() -> None:
+    cfg = get_config("internlm2-1.8b").smoke().replace(dtype="float32")
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_len=64, slots=4))
+
+    rng = np.random.default_rng(0)
+    requests = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+                for _ in range(10)]
+    t0 = time.perf_counter()
+    outs = eng.serve(requests, max_new=16)
+    dt = time.perf_counter() - t0
+    tokens = sum(o.size for o in outs)
+    print(f"served {len(requests)} requests, {tokens} new tokens in "
+          f"{dt:.2f}s ({tokens/dt:.1f} tok/s on CPU smoke model)")
+    for i, o in enumerate(outs[:3]):
+        print(f"req{i}: prompt={requests[i][:4]}... -> {o}")
+
+    # Decode correctness contract: engine output == argmax of full forwards.
+    from repro.models import Runtime
+    fwd = jax.jit(lambda p, b: model.forward(p, b, Runtime(q_chunk=0)))
+    toks = requests[0][None, :]
+    import jax.numpy as jnp
+    for step in range(4):
+        logits, _ = fwd(params, {"tokens": jnp.asarray(toks, jnp.int32)})
+        nxt = int(np.argmax(np.asarray(logits, np.float32)[0, -1]))
+        assert nxt == int(outs[0][step]), "engine/decode mismatch"
+        toks = np.concatenate([toks, [[nxt]]], axis=1)
+    print("decode path verified against full forward (first 4 tokens).")
+
+
+if __name__ == "__main__":
+    main()

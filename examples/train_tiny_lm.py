@@ -1,0 +1,81 @@
+"""End-to-end training driver: byte-level LM on the bundled corpus with
+checkpointing, supervised restart, and straggler detection.
+
+Default is a ~10M-param model x 200 steps (CPU-friendly); ``--preset 100m``
+selects a ~100M-param config for real hardware.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --steps 200
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data import ByteCorpus, DataConfig
+from repro.ft import StragglerDetector, Supervisor
+from repro.models import get_model
+from repro.train import OptConfig, TrainConfig, init_train_state, \
+    make_train_step, train_loop
+
+
+def build(preset: str):
+    base = get_config("internlm2-1.8b")
+    if preset == "100m":
+        cfg = base.replace(name="bytes-100m", n_layers=12, d_model=768,
+                           n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048,
+                           vocab_size=256, dtype="float32")
+    else:
+        cfg = base.replace(name="bytes-10m", n_layers=4, d_model=256,
+                           n_heads=8, n_kv_heads=4, head_dim=32, d_ff=1024,
+                           vocab_size=256, dtype="float32")
+    return cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--preset", choices=["10m", "100m"], default="10m")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default="artifacts/tiny_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = build(args.preset)
+    model = get_model(cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(model.param_shapes()))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    tc = TrainConfig(
+        opt=OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+        microbatches=2, ckpt_every=50)
+    data = ByteCorpus(DataConfig(vocab_size=256, seq_len=args.seq,
+                                 global_batch=args.batch))
+    ck = Checkpointer(args.ckpt_dir)
+    straggler = StragglerDetector()
+    state, _ = init_train_state(model, jax.random.PRNGKey(0), tc)
+    step_fn = jax.jit(make_train_step(model, tc), donate_argnums=0)
+
+    def train_fn(st, start):
+        return train_loop(model, tc, data, steps=args.steps, state=st,
+                          start_step=start, checkpointer=ck, step_fn=step_fn,
+                          straggler=straggler)
+
+    sup = Supervisor(ck, max_restarts=3)
+    state, hist = sup.run(train_fn, state)
+
+    losses = [m["loss"] for _, m in hist]
+    times = [m["step_time_s"] for _, m in hist]
+    print(f"steps={len(hist)} loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(ln(256)={5.545:.3f} is uniform)")
+    print(f"median step {sorted(times)[len(times)//2]*1e3:.0f} ms; "
+          f"stragglers flagged: {len(straggler.flagged)}; "
+          f"restarts: {sup.restarts}")
+    assert losses[-1] < losses[0] * 0.7, "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

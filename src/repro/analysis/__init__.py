@@ -1,0 +1,5 @@
+from .hlo import CollectiveStats, parse_collectives
+from .roofline import RooflineTerms, model_flops, roofline_from_cell
+
+__all__ = ["CollectiveStats", "parse_collectives", "RooflineTerms",
+           "model_flops", "roofline_from_cell"]

@@ -1,0 +1,18 @@
+"""The paper's primary contribution: reliable auto-discovery of compute and
+memory topologies (MT4G), adapted TPU-native and consumed by the framework's
+distribution, roofline, and performance-model layers."""
+from .topology import (Attribute, ComputeElement, Link, MemoryElement,
+                       Topology)
+from .catalog import CATALOG, HOST_CPU, TPU_V4, TPU_V5E, HardwareSpec, get_spec
+from .simulate import (SIM_DEVICES, SimDevice, SimLevel, make_h100_like,
+                       make_mi210_like, make_v5e_like)
+from .discover import (DiscoveryTimings, discover_host, discover_sim,
+                       spec_from_topology)
+
+__all__ = [
+    "Attribute", "ComputeElement", "Link", "MemoryElement", "Topology",
+    "CATALOG", "HOST_CPU", "TPU_V4", "TPU_V5E", "HardwareSpec", "get_spec",
+    "SIM_DEVICES", "SimDevice", "SimLevel", "make_h100_like",
+    "make_mi210_like", "make_v5e_like",
+    "DiscoveryTimings", "discover_host", "discover_sim", "spec_from_topology",
+]

@@ -1,0 +1,25 @@
+"""Microbenchmark probes (paper contribution C2)."""
+from .runners import HostRunner, ProbeRunner, SimRunner, SpaceInfo, sattolo_cycle
+from .size import SizeResult, find_size
+from .latency import LatencyResult, measure_latency
+from .linesize import (GranularityResult, LineSizeResult,
+                       find_fetch_granularity, find_line_size, snap_pow2)
+from .amount import (AmountResult, CuSharingResult, SharingResult,
+                     align_segments, find_amount, find_cu_sharing, find_sharing)
+from .bandwidth import (BandwidthResult, CollectiveEstimate, all_to_all_time,
+                        measure_bandwidth, measure_collective,
+                        ring_all_gather_time, ring_all_reduce_time)
+from .adjacency import AdjacencyResult, SimPod, find_link_adjacency
+
+__all__ = [
+    "HostRunner", "ProbeRunner", "SimRunner", "SpaceInfo", "sattolo_cycle",
+    "SizeResult", "find_size", "LatencyResult", "measure_latency",
+    "GranularityResult", "LineSizeResult", "find_fetch_granularity",
+    "find_line_size", "snap_pow2",
+    "AmountResult", "CuSharingResult", "SharingResult", "align_segments",
+    "find_amount", "find_cu_sharing", "find_sharing",
+    "BandwidthResult", "CollectiveEstimate", "all_to_all_time",
+    "measure_bandwidth", "measure_collective", "ring_all_gather_time",
+    "ring_all_reduce_time",
+    "AdjacencyResult", "SimPod", "find_link_adjacency",
+]

@@ -1,0 +1,127 @@
+"""Amount (paper §IV-F), L2-segment alignment (§IV-F.1), physical-sharing
+(§IV-G NVIDIA-style, §IV-H AMD-style) probes.
+
+All three share the warm-A / warm-B / probe-A eviction pattern of paper
+Fig. 3; hit-vs-miss classification reuses the K-S test against hit/miss
+reference distributions rather than ad-hoc thresholds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..stats import ks_2samp
+
+__all__ = ["AmountResult", "find_amount", "align_segments",
+           "SharingResult", "find_sharing", "CuSharingResult", "find_cu_sharing"]
+
+
+def _is_miss(probe: np.ndarray, hit_ref: np.ndarray, miss_ref: np.ndarray,
+             alpha: float = 0.01) -> bool:
+    """Classify a step-3 distribution: closer to the miss or the hit regime."""
+    differs_from_hit = ks_2samp(probe, hit_ref, alpha=alpha).reject
+    differs_from_miss = ks_2samp(probe, miss_ref, alpha=alpha).reject
+    if differs_from_hit and not differs_from_miss:
+        return True
+    if differs_from_miss and not differs_from_hit:
+        return False
+    # Ambiguous -> fall back to median proximity.
+    pm, hm, mm = (float(np.median(x)) for x in (probe, hit_ref, miss_ref))
+    return abs(pm - mm) < abs(pm - hm)
+
+
+@dataclass(frozen=True)
+class AmountResult:
+    amount: int
+    found: bool
+    first_disjoint_core: int    # first core-B index that did NOT evict core A
+    tested_cores: list[int] = field(default_factory=list)
+
+
+def find_amount(runner, space: str, cache_size: int, cores_per_sm: int,
+                n_samples: int = 65) -> AmountResult:
+    """Paper §IV-F: pin core A at 0, double core B's index; the first B index
+    on a different segment leaves A's data resident -> amount = cores/B."""
+    arr = int(cache_size * 0.9)  # "close to the cache size"
+    hit_ref = runner.pchase(space, arr // 4, 32, n_samples)
+    miss_ref = runner.pchase(space, cache_size * 4, 32, n_samples)
+
+    tested = []
+    b = 1
+    while b < cores_per_sm:
+        tested.append(b)
+        probe = runner.amount_probe(space, 0, b, arr, n_samples)
+        if not _is_miss(probe, hit_ref, miss_ref):
+            return AmountResult(max(cores_per_sm // b, 1), True, b, tested)
+        b *= 2
+    return AmountResult(1, True, -1, tested)
+
+
+def align_segments(api_total: int, measured_segment: int) -> tuple[int, int, float]:
+    """Paper §IV-F.1: align the measured L2 segment size to the nearest
+    integer fraction of the API-reported total.
+
+    Returns (num_segments, aligned_segment_size, confidence in [0,1]) where
+    confidence reflects the distance from the nearest integer fraction.
+    """
+    if measured_segment <= 0 or api_total <= 0:
+        return 1, api_total, 0.0
+    ratio = api_total / measured_segment
+    k = max(int(round(ratio)), 1)
+    err = abs(ratio - k) / max(ratio, 1e-9)
+    return k, api_total // k, max(0.0, 1.0 - 2.0 * err)
+
+
+@dataclass(frozen=True)
+class SharingResult:
+    shared: bool
+    space_a: str
+    space_b: str
+
+
+def find_sharing(runner, space_a: str, space_b: str, cache_size: int,
+                 n_samples: int = 65) -> SharingResult:
+    """Paper §IV-G: warm A, warm B, probe A on one core — misses mean the two
+    logical spaces occupy the same physical cache."""
+    arr = int(cache_size * 0.9)
+    hit_ref = runner.pchase(space_a, arr // 4, 32, n_samples)
+    miss_ref = runner.pchase(space_a, cache_size * 4, 32, n_samples)
+    probe = runner.sharing_probe(space_a, space_b, arr, n_samples)
+    return SharingResult(_is_miss(probe, hit_ref, miss_ref), space_a, space_b)
+
+
+@dataclass(frozen=True)
+class CuSharingResult:
+    groups: list[list[int]]          # CU ids sharing one sL1d
+    exclusive: list[int]             # CUs with a whole sL1d to themselves
+
+
+def find_cu_sharing(runner, cu_ids: list[int], cache_size: int,
+                    n_samples: int = 33, space: str = "sL1d") -> CuSharingResult:
+    """Paper §IV-H: test CU pairs for sL1d sharing; no layout assumptions.
+
+    The full pairwise sweep is O(n^2); like MT4G we test all pairs (the paper
+    notes this explicitly) but short-circuit once a CU is already grouped.
+    """
+    arr = int(cache_size * 0.9)
+    hit_ref = runner.pchase(space, arr // 4, 32, n_samples)
+    miss_ref = runner.pchase(space, cache_size * 4, 32, n_samples)
+
+    assigned: dict[int, int] = {}
+    groups: list[list[int]] = []
+    for i, cu_a in enumerate(cu_ids):
+        if cu_a in assigned:
+            continue
+        group = [cu_a]
+        assigned[cu_a] = len(groups)
+        for cu_b in cu_ids[i + 1:]:
+            if cu_b in assigned:
+                continue
+            probe = runner.cu_sharing_probe(cu_a, cu_b, arr, n_samples)
+            if _is_miss(probe, hit_ref, miss_ref):
+                group.append(cu_b)
+                assigned[cu_b] = assigned[cu_a]
+        groups.append(group)
+    exclusive = [g[0] for g in groups if len(g) == 1]
+    return CuSharingResult(groups, exclusive)

@@ -1,0 +1,36 @@
+"""Load-latency benchmark (paper §IV-C).
+
+A p-chase with one fixed, small array (256 x fetch granularity — guaranteed to
+fit the target element after warm-up) whose per-load times *are* the result.
+We report the mean plus the statistics set the paper lists (p50, p95, stddev).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["LatencyResult", "measure_latency"]
+
+
+@dataclass(frozen=True)
+class LatencyResult:
+    mean: float
+    p50: float
+    p95: float
+    std: float
+    n: int
+
+
+def measure_latency(runner, space: str, fetch_granularity: int = 32,
+                    n_samples: int = 257, array_factor: int = 256) -> LatencyResult:
+    arr = int(array_factor * fetch_granularity)
+    lats = np.asarray(runner.pchase(space, arr, fetch_granularity, n_samples),
+                      dtype=np.float64)
+    return LatencyResult(
+        mean=float(np.mean(lats)),
+        p50=float(np.percentile(lats, 50)),
+        p95=float(np.percentile(lats, 95)),
+        std=float(np.std(lats)),
+        n=lats.size,
+    )

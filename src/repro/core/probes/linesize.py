@@ -1,0 +1,145 @@
+"""Fetch-granularity (paper §IV-D) and cache-line-size (paper §IV-E) probes.
+
+Fetch granularity: cold-pass p-chase with strides growing by 4 B. While the
+stride is below the granularity some loads land in the segment fetched by
+their predecessor (hits + misses mixed); once every load opens a new fetch
+transaction, only misses remain — that stride is the granularity. We detect
+"mixed vs all-miss" by K-S-comparing each stride's distribution against an
+all-miss reference (a stride far above any plausible granularity), using the
+same statistical machinery as everywhere else.
+
+Cache line size: once the capacity C is known, p-chase an array slightly
+above C with growing step sizes. While step <= line size the footprint still
+exceeds C (misses); once step > line the touched-line footprint shrinks below
+C "as if the cache was larger" (hits). Per the paper's heuristics we compare
+each step's distribution to a certain-miss pivot and a certain-hit MAX
+reference, and snap the estimate to a power of two.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..stats import ks_2samp, ks_statistic
+
+__all__ = ["GranularityResult", "find_fetch_granularity",
+           "LineSizeResult", "find_line_size", "snap_pow2"]
+
+
+def snap_pow2(x: float) -> int:
+    """Snap to the nearest power of two (paper §IV-E final heuristic)."""
+    if x <= 1:
+        return 1
+    lo = 1 << int(np.floor(np.log2(x)))
+    hi = lo * 2
+    return lo if (x / lo) <= (hi / x) else hi
+
+
+@dataclass(frozen=True)
+class GranularityResult:
+    granularity: int
+    found: bool
+    strides: np.ndarray
+    mixed: np.ndarray          # bool per stride: hits+misses mixed?
+
+
+def find_fetch_granularity(
+    runner, space: str,
+    max_stride: int = 512,
+    array_bytes: int = 64 * 1024,
+    n_samples: int = 65,
+    stride_step: int = 4,
+    confirm: int = 2,
+) -> GranularityResult:
+    """Paper §IV-D: grow the stride by 4 B until only misses remain.
+
+    A load is classified hit/miss against warm-hit and all-miss reference
+    distributions (their medians are far apart by construction); a stride is
+    "mixed" while any statistically meaningful hit fraction remains. The
+    granularity is the first stride with ``confirm`` all-miss successors —
+    single-stride flukes at low sample counts must not end the search early.
+    """
+    # References: a warm chase that surely hits, and a cold chase whose
+    # stride is far beyond any plausible granularity (every load misses).
+    hit_ref = runner.pchase(space, array_bytes // 4, stride_step * 8, n_samples)
+    ref_stride = max_stride * 8
+    miss_ref = runner.cold_chase(space, ref_stride * (n_samples + 1),
+                                 ref_stride, n_samples)
+    thresh = (float(np.median(hit_ref)) + float(np.median(miss_ref))) / 2.0
+
+    strides = np.arange(stride_step, max_stride + stride_step, stride_step)
+    mixed = np.zeros(strides.size, dtype=bool)
+    # Hit/miss is classified per load, so use a long cold pass: near the
+    # granularity the hit fraction approaches stride_step/G and needs enough
+    # loads to be observable above the fluke floor (256 B granularities
+    # produce only ~1.6% hits at the last mixed stride).
+    n_loads = 16 * n_samples
+    min_frac = max(0.005, 2.0 / n_loads)
+    candidate_i = -1
+    for i, s in enumerate(strides):
+        arr = max(array_bytes, int(s) * (n_loads + 1))
+        cur = runner.cold_chase(space, arr, int(s), n_loads)
+        hit_frac = float(np.mean(cur < thresh))
+        mixed[i] = hit_frac > min_frac
+        if not mixed[i] and candidate_i < 0:
+            candidate_i = i
+        elif mixed[i]:
+            candidate_i = -1  # fluke: hits reappeared, keep searching
+        if candidate_i >= 0 and i - candidate_i >= confirm:
+            g = int(strides[candidate_i])
+            return GranularityResult(g, True, strides[: i + 1], mixed[: i + 1])
+    if candidate_i >= 0:
+        return GranularityResult(int(strides[candidate_i]), True, strides, mixed)
+    return GranularityResult(-1, False, strides, mixed)
+
+
+@dataclass(frozen=True)
+class LineSizeResult:
+    line_size: int
+    found: bool
+    raw_estimate: float
+    steps: np.ndarray
+    hit_score: np.ndarray      # similarity-to-hit-reference per step
+
+
+def find_line_size(
+    runner, space: str,
+    cache_size: int,
+    fetch_granularity: int,
+    n_samples: int = 65,
+    over_factor: float = 1.0625,
+    max_line: int = 1024,
+) -> LineSizeResult:
+    """Paper §IV-E with the pivot/MAX heuristic."""
+    g2 = max(fetch_granularity // 2, 4)
+    arr = int(cache_size * over_factor)
+
+    # Pivot: certain miss (tiny step, array beyond capacity).
+    pivot = runner.pchase(space, arr, g2, n_samples)
+    # MAX: certain hit (huge step shrinks the footprint far below capacity).
+    hit_ref = runner.pchase(space, arr, max_line * 8, n_samples)
+
+    steps = np.arange(g2, max_line * 2 + g2, g2, dtype=np.int64)
+    hit_score = np.zeros(steps.size)
+    first_hit_step = -1
+    for i, s in enumerate(steps):
+        cur = runner.pchase(space, arr, int(s), n_samples)
+        d_pivot = ks_statistic(cur, pivot)
+        d_hit = ks_statistic(cur, hit_ref)
+        hit_score[i] = d_pivot - d_hit          # >0 -> closer to the hit side
+        if hit_score[i] > 0 and first_hit_step < 0:
+            first_hit_step = int(s)
+        if first_hit_step > 0 and s >= 4 * first_hit_step:
+            steps, hit_score = steps[: i + 1], hit_score[: i + 1]
+            break
+
+    if first_hit_step < 0:
+        return LineSizeResult(-1, False, -1.0, steps, hit_score)
+    # The transition step satisfies step ~= line * over_factor.
+    raw = first_hit_step / over_factor
+    # A step equal to the line size still touches every line; the first
+    # *hitting* step is one granularity notch above -> bias the raw estimate
+    # down by half a notch before snapping to a power of two.
+    raw_adj = max(raw - g2 / 2, g2)
+    return LineSizeResult(snap_pow2(raw_adj), True, raw, steps, hit_score)

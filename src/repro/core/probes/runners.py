@@ -1,0 +1,211 @@
+"""Probe runners: who actually executes a memory-access pattern.
+
+The probe *workflows* (size, latency, line size, amount, ...) are runner-
+agnostic — the same code drives:
+
+* ``SimRunner``   — virtual devices with ground truth (validation tables);
+* ``HostRunner``  — real measurements on this machine's CPU hierarchy using
+                    jit-compiled dependent-load chases (the live-hardware
+                    sanity check; TPU/GPU-free analogue of paper §V);
+* ``PallasRunner``— the TPU-target kernels in ``repro.kernels`` (pchase_probe,
+                    stream_probe), exercised in interpret mode here.
+
+Per DESIGN.md adaptation note 1, runners without an in-kernel clock time a
+short dependent chain end-to-end and report the distribution across
+repetitions; the K-S evaluation is identical either way.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+__all__ = ["ProbeRunner", "SpaceInfo", "SimRunner", "HostRunner", "sattolo_cycle"]
+
+
+@dataclass(frozen=True)
+class SpaceInfo:
+    """Search hints for one probeable memory space."""
+
+    name: str
+    scope: str                    # "core" | "chip" | "host"
+    kind: str                     # "cache" | "scratchpad" | "memory"
+    max_bytes: int                # upper bound for the size search
+    supports_cold: bool = True    # cold-pass (fetch granularity) available?
+    supports_amount: bool = True
+    supports_sharing: bool = True
+
+
+@runtime_checkable
+class ProbeRunner(Protocol):
+    """The capability surface the probe workflows rely on."""
+
+    def spaces(self) -> list[SpaceInfo]: ...
+
+    def pchase(self, space: str, array_bytes: int, stride: int,
+               n_samples: int) -> np.ndarray: ...
+
+    def cold_chase(self, space: str, array_bytes: int, stride: int,
+                   n_samples: int) -> np.ndarray: ...
+
+    def amount_probe(self, space: str, core_a: int, core_b: int,
+                     array_bytes: int, n_samples: int) -> np.ndarray: ...
+
+    def sharing_probe(self, space_a: str, space_b: str, array_bytes: int,
+                      n_samples: int) -> np.ndarray: ...
+
+    def bandwidth(self, space: str, mode: str = "read") -> float: ...
+
+
+def sattolo_cycle(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Random single-cycle permutation (defeats stride prefetchers; the
+    standard p-chase array construction, cf. Mei & Chu [39])."""
+    perm = np.arange(n, dtype=np.int32)
+    for i in range(n - 1, 0, -1):
+        j = rng.integers(0, i)
+        perm[i], perm[j] = perm[j], perm[i]
+    return perm
+
+
+# --------------------------------------------------------------------------
+# Simulated runner
+# --------------------------------------------------------------------------
+class SimRunner:
+    """Adapts a ``SimDevice`` to the ProbeRunner protocol."""
+
+    def __init__(self, device):
+        self.device = device
+
+    def spaces(self) -> list[SpaceInfo]:
+        out = []
+        for lvl in self.device.levels:
+            out.append(SpaceInfo(
+                name=lvl.name, scope=lvl.scope, kind=lvl.kind,
+                max_bytes=lvl.size * 8,
+                supports_cold=lvl.kind == "cache",
+                supports_amount=lvl.kind == "cache" and lvl.scope == "core",
+                supports_sharing=lvl.kind == "cache",
+            ))
+        return out
+
+    def pchase(self, space, array_bytes, stride, n_samples):
+        return self.device.pchase(space, array_bytes, stride, n_samples)
+
+    def cold_chase(self, space, array_bytes, stride, n_samples):
+        return self.device.cold_chase(space, array_bytes, stride, n_samples)
+
+    def amount_probe(self, space, core_a, core_b, array_bytes, n_samples):
+        return self.device.amount_probe(space, core_a, core_b, array_bytes, n_samples)
+
+    def sharing_probe(self, space_a, space_b, array_bytes, n_samples):
+        return self.device.sharing_probe(space_a, space_b, array_bytes, n_samples)
+
+    def cu_sharing_probe(self, cu_a, cu_b, array_bytes, n_samples):
+        return self.device.cu_sharing_probe(cu_a, cu_b, array_bytes, n_samples)
+
+    def bandwidth(self, space, mode="read"):
+        return self.device.bandwidth(space, mode)
+
+    @property
+    def cores_per_sm(self) -> int:
+        return self.device.cores_per_sm
+
+
+# --------------------------------------------------------------------------
+# Host (real CPU) runner
+# --------------------------------------------------------------------------
+class HostRunner:
+    """Real p-chase measurements against this machine's cache hierarchy.
+
+    Per-load timing at ns resolution is not available from Python, so — per
+    DESIGN.md adaptation note 1 — each "sample" is the mean ns/load of a
+    jit-compiled dependent-load loop (warm, single cycle), and the probe
+    distribution is built across ``n_samples`` repetitions.
+    """
+
+    ELEM_BYTES = 4  # int32 chase indices
+
+    def __init__(self, max_bytes: int = 256 * 1024**2, iters: int = 1 << 15,
+                 seed: int = 0):
+        import jax  # local import: keep module import cheap
+
+        self._jax = jax
+        self.max_bytes = max_bytes
+        self.iters = iters
+        self._rng = np.random.default_rng(seed)
+        self._chase_cache: dict[int, object] = {}
+
+    def spaces(self) -> list[SpaceInfo]:
+        return [SpaceInfo(
+            name="host-cache", scope="host", kind="cache",
+            max_bytes=self.max_bytes,
+            supports_cold=False, supports_amount=False, supports_sharing=False,
+        )]
+
+    # ------------------------------------------------------------- chase
+    def _chase_fn(self):
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def run(perm, iters):
+            def body(_, x):
+                return perm[x]
+            return jax.lax.fori_loop(0, iters, body, jnp.int32(0))
+
+        return run
+
+    def pchase(self, space, array_bytes, stride, n_samples):
+        del space
+        import jax.numpy as jnp
+
+        stride_elems = max(stride // self.ELEM_BYTES, 1)
+        n = max(array_bytes // self.ELEM_BYTES // stride_elems, 4)
+        # Random single cycle over n slots; slot i stands for byte offset
+        # i*stride, so the resident footprint matches ``array_bytes``.
+        perm_np = sattolo_cycle(n, self._rng)
+        perm = jnp.asarray(perm_np)
+        run = self._chase_cache.setdefault(0, self._chase_fn())
+        iters = max(self.iters, n)
+        run(perm, iters).block_until_ready()  # warm-up pass (paper §IV-A)
+        out = np.empty(n_samples)
+        for s in range(n_samples):
+            t0 = time.perf_counter_ns()
+            run(perm, iters).block_until_ready()
+            out[s] = (time.perf_counter_ns() - t0) / iters
+        return out
+
+    def cold_chase(self, space, array_bytes, stride, n_samples):
+        raise NotImplementedError("host runner has no cold-pass control")
+
+    def amount_probe(self, *a, **k):
+        raise NotImplementedError("host runner is single-actor")
+
+    def sharing_probe(self, *a, **k):
+        raise NotImplementedError("host runner has a unified cache path")
+
+    # --------------------------------------------------------- bandwidth
+    def bandwidth(self, space, mode="read", nbytes: int = 128 * 1024**2,
+                  repeats: int = 5):
+        del space
+        import jax
+        import jax.numpy as jnp
+
+        n = nbytes // 4
+        x = jnp.arange(n, dtype=jnp.float32)
+
+        if mode == "read":
+            fn = jax.jit(lambda v: jnp.sum(v))
+            moved = nbytes
+        else:  # write (copy: read + write -> count written bytes)
+            fn = jax.jit(lambda v: v + 1.0)
+            moved = nbytes
+        fn(x).block_until_ready()
+        best = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter_ns()
+            fn(x).block_until_ready()
+            best = min(best, time.perf_counter_ns() - t0)
+        return moved / (best * 1e-9)

@@ -1,0 +1,130 @@
+"""Size benchmark (paper §IV-B) — the fundamental MT4G probe.
+
+Workflow (paper §IV-B.1):
+  1. identify a narrower search interval (exponential doubling from the lower
+     bound until the latency distribution departs from the baseline, then
+     binary search to re-narrow);
+  2. run p-chase with array sizes swept across the interval, step = fetch
+     granularity (coarsened only if the interval would need too many points);
+  3. check for outliers; widen the interval and repeat (2) if found;
+  4. reduce (eq. 2) and detect the change point with the K-S test; report the
+     size and the confidence metric.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..stats import (boundary_suspect, cusum_change_point,
+                     geometric_reduction, ks_2samp, ks_change_point,
+                     winsorize)
+
+__all__ = ["SizeResult", "find_size"]
+
+KIB = 1024
+
+
+@dataclass(frozen=True)
+class SizeResult:
+    size: int                # bytes; -1 if not found
+    found: bool
+    confidence: float        # K-S confidence at the change point
+    pvalue: float
+    sizes_swept: np.ndarray  # the final sweep grid
+    reduced: np.ndarray      # eq. 2 series over the grid (for Fig. 2 plots)
+    widenings: int           # how many times step (3) widened the interval
+    samples_per_size: int
+    cusum_agrees: bool = True  # parametric cross-check (paper: 'other
+                               # algorithms'); False flags a suspect result
+
+
+def _distribution_shifted(base: np.ndarray, cur: np.ndarray, alpha: float,
+                          min_jump: float = 0.15) -> bool:
+    """Statistical (K-S) AND practical significance: a real next-level miss
+    raises the median by >=1.5x on every hierarchy in the paper's tables;
+    requiring a modest +15% median jump suppresses the ~alpha-rate false
+    positives that small samples produce on identical distributions."""
+    if not ks_2samp(base, cur, alpha=alpha).reject:
+        return False
+    return float(np.median(cur)) > float(np.median(base)) * (1.0 + min_jump)
+
+
+def find_size(
+    runner,
+    space: str,
+    lo: int = 1 * KIB,
+    hi: int = 1024 * KIB,
+    step: int = 32,
+    n_samples: int = 33,
+    alpha: float = 0.01,
+    max_points: int = 96,
+    max_widenings: int = 3,
+    max_bytes: int | None = None,
+) -> SizeResult:
+    """Run the full §IV-B workflow against ``runner``/``space``."""
+    max_bytes = max_bytes or 64 * 1024 * KIB
+
+    # -- (1a) exponential doubling until the distribution departs from baseline
+    base = runner.pchase(space, lo, step, n_samples)
+    size = lo
+    first_bad = None
+    while size <= max_bytes:
+        size *= 2
+        cur = runner.pchase(space, size, step, n_samples)
+        if _distribution_shifted(base, cur, alpha):
+            first_bad = size
+            break
+    if first_bad is None:
+        return SizeResult(-1, False, 0.0, 1.0, np.zeros(0), np.zeros(0), 0, n_samples)
+
+    # -- (1b) binary search to narrow [last_good, first_bad]
+    last_good, bad = first_bad // 2, first_bad
+    while bad - last_good > max(8 * step, (bad + last_good) // 64):
+        mid = (last_good + bad) // 2
+        cur = runner.pchase(space, mid, step, n_samples)
+        if _distribution_shifted(base, cur, alpha):
+            bad = mid
+        else:
+            last_good = mid
+    sweep_lo, sweep_hi = last_good, bad
+
+    widenings = 0
+    while True:
+        # -- (2) linear sweep, step = fetch granularity (coarsen if too wide)
+        span = sweep_hi - sweep_lo
+        eff_step = step
+        if span // step > max_points:
+            eff_step = max(step, (span // max_points) // step * step)
+        sizes = np.arange(sweep_lo, sweep_hi + eff_step, eff_step, dtype=np.int64)
+        rows = np.stack([runner.pchase(space, int(s), step, n_samples)
+                         for s in sizes])
+
+        # -- (4) reduce + K-S change point
+        reduced = geometric_reduction(rows)
+        cp = ks_change_point(reduced, alpha=alpha, min_segment=3)
+
+        # -- (3) outlier / boundary check -> widen interval and re-sweep
+        need_widen = (not cp.found) or boundary_suspect(reduced) or \
+                     cp.index <= 2 or cp.index >= sizes.size - 2
+        if need_widen and widenings < max_widenings:
+            widenings += 1
+            span = max(span, eff_step * 8)
+            sweep_lo = max(lo, sweep_lo - span // 2)
+            sweep_hi = min(max_bytes, sweep_hi + span // 2)
+            continue
+
+        if not cp.found:
+            return SizeResult(-1, False, 0.0, cp.pvalue, sizes, reduced,
+                              widenings, n_samples)
+        # cp.index is the first size in the *miss* regime; the capacity is the
+        # last size that still fits.
+        detected = int(sizes[max(cp.index - 1, 0)])
+        # Parametric cross-check (CUSUM on the winsorized reduction): the two
+        # detectors agreeing within a few grid steps raises confidence in the
+        # non-parametric result; disagreement is surfaced to the caller.
+        cc = cusum_change_point(winsorize(reduced, pct=2.0))
+        agrees = bool(cc.found and abs(cc.index - cp.index)
+                      <= max(3, sizes.size // 10))
+        return SizeResult(detected, True, cp.confidence, cp.pvalue, sizes,
+                          reduced, widenings, n_samples, cusum_agrees=agrees)

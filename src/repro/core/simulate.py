@@ -1,0 +1,301 @@
+"""Simulated memory hierarchies with known ground truth.
+
+The paper validates MT4G against 10 physical GPUs (Tables II/III). This
+container has no GPU/TPU, so we reproduce that validation loop against
+*simulated devices*: parameterized hierarchies that generate per-load latency
+distributions (with realistic noise and injected outliers) for the same probe
+requests the real backends would serve. The probe + K-S machinery under test
+is byte-for-byte the code that runs against real hardware runners.
+
+The simulation model is deliberately behavioral, not cycle-accurate:
+
+* capacity: a cyclic p-chase over ``A`` bytes with step ``s`` touches
+  ``ceil(A / max(s, L)) * L`` resident bytes of a cache with line size ``L``;
+  it hits iff that footprint fits (paper Fig. 1).
+* fetch granularity: on a cold pass, a load misses iff it lands in a new
+  ``G``-byte fetched segment (paper §IV-D).
+* amount/sharing: two actors evict each other iff they map to the same
+  physical segment and their combined footprint exceeds it (paper Fig. 3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "SimLevel", "SimDevice",
+    "make_h100_like", "make_mi210_like", "make_v5e_like",
+    "SIM_DEVICES",
+]
+
+
+@dataclass(frozen=True)
+class SimLevel:
+    """Ground truth for one cache/memory level of a simulated device."""
+
+    name: str                  # "L1", "L2", "Texture", "vL1", "sL1d", "VMEM"...
+    size: int                  # bytes
+    latency: float             # cycles, mean on hit
+    line_size: int             # bytes
+    fetch_granularity: int     # bytes
+    amount: int = 1            # independent segments within its scope
+    noise: float = 1.0         # latency stddev
+    scope: str = "core"        # "core" | "chip"
+    physical_group: str = ""   # caches in the same group share silicon
+    kind: str = "cache"
+    path: str = "global"       # miss path: e.g. NVIDIA constant caches form
+                               # their own ConstL1 -> ConstL1.5 hierarchy
+
+    @property
+    def group(self) -> str:
+        return self.physical_group or self.name
+
+
+@dataclass
+class SimDevice:
+    """A virtual device serving probe requests against a known hierarchy."""
+
+    name: str
+    vendor: str
+    levels: list[SimLevel]                      # ordered smallest..largest
+    mem_latency: float                          # device/host memory latency
+    mem_noise: float = 8.0
+    read_bw: dict[str, float] = field(default_factory=dict)   # space -> B/s
+    write_bw: dict[str, float] = field(default_factory=dict)
+    cores_per_sm: int = 32
+    cu_share_groups: list[list[int]] = field(default_factory=list)  # AMD sL1d
+    space_of_level: dict[str, str] = field(default_factory=dict)    # space -> level name
+    outlier_prob: float = 0.002
+    outlier_scale: float = 30.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._by_name = {l.name: l for l in self.levels}
+
+    # ------------------------------------------------------------ helpers
+    def level(self, space: str) -> SimLevel:
+        name = self.space_of_level.get(space, space)
+        try:
+            return self._by_name[name]
+        except KeyError as e:
+            raise KeyError(f"{self.name}: unknown memory space '{space}'") from e
+
+    def _chain(self, space: str) -> list[SimLevel]:
+        """Levels an access targeted at ``space`` passes through, small->large:
+        larger caches on the SAME path (constant path on NVIDIA), then the
+        chip-level caches."""
+        lvl = self.level(space)
+        higher = [l for l in self.levels if l.kind == "cache"
+                  and l.size > lvl.size
+                  and (l.scope == "chip" or l.path == lvl.path)]
+        return [lvl] + sorted(higher, key=lambda l: l.size)
+
+    def _lat(self, mean: float, noise: float, n: int) -> np.ndarray:
+        lats = self._rng.normal(mean, noise, size=n)
+        # Injected measurement outliers (paper: disturbances the K-S must absorb)
+        mask = self._rng.random(n) < self.outlier_prob
+        lats[mask] *= self.outlier_scale
+        return np.maximum(lats, 1.0)
+
+    @staticmethod
+    def _footprint(array_bytes: int, stride: int, line: int) -> int:
+        touched = math.ceil(array_bytes / max(stride, line))
+        return touched * line
+
+    # -------------------------------------------------------- probe API
+    def pchase(self, space: str, array_bytes: int, stride: int,
+               n_samples: int, warmup: bool = True) -> np.ndarray:
+        """Warm p-chase latencies (paper §IV-A/B): hit level determined by
+        whether the strided footprint fits each level of the chain."""
+        del warmup  # warm pass is implied; cold behavior via cold_chase()
+        if space == "DeviceMemory":
+            # Cache-bypassing load (paper §IV-C: `.cg` / GLC-bit semantics).
+            return self._lat(self.mem_latency, self.mem_noise, n_samples)
+        chain = self._chain(space)
+        for lvl in chain:
+            fp = self._footprint(array_bytes, stride, lvl.line_size)
+            # One core only reaches one of the level's segments (paper §IV-F.1:
+            # e.g. an SM sees a single 25 MB half of H100's 50 MB L2).
+            usable = lvl.size // max(lvl.amount, 1)
+            if fp <= usable:
+                return self._lat(lvl.latency, lvl.noise, n_samples)
+        return self._lat(self.mem_latency, self.mem_noise, n_samples)
+
+    def cold_chase(self, space: str, array_bytes: int, stride: int,
+                   n_samples: int) -> np.ndarray:
+        """Cold-pass latencies for the fetch-granularity probe (§IV-D):
+        a load hits iff it falls into the segment fetched by its predecessor."""
+        lvl = self.level(space)
+        g = lvl.fetch_granularity
+        n_loads = max(array_bytes // max(stride, 1), 1)
+        idx = np.arange(min(n_loads, n_samples))
+        seg = (idx * stride) // g
+        prev_seg = np.concatenate([[-1], seg[:-1]])
+        miss = seg != prev_seg
+        chain = self._chain(lvl.name)
+        next_lat = chain[1].latency if len(chain) > 1 else self.mem_latency
+        next_noise = chain[1].noise if len(chain) > 1 else self.mem_noise
+        lats = np.where(miss,
+                        self._lat(next_lat, next_noise, idx.size),
+                        self._lat(lvl.latency, lvl.noise, idx.size))
+        return lats
+
+    def _next_latency(self, lvl: SimLevel) -> float:
+        chain = self._chain(lvl.name)
+        return chain[1].latency if len(chain) > 1 else self.mem_latency
+
+    def amount_probe(self, space: str, core_a: int, core_b: int,
+                     array_bytes: int, n_samples: int) -> np.ndarray:
+        """Step-3 latencies of the Amount workflow (paper Fig. 3).
+
+        Cores are spread evenly over the level's segments; eviction occurs iff
+        both cores map to the same segment and 2x footprint exceeds it."""
+        lvl = self.level(space)
+        seg_size = lvl.size // max(lvl.amount, 1)
+        per_seg_cores = max(self.cores_per_sm // max(lvl.amount, 1), 1)
+        same_segment = (core_a // per_seg_cores) == (core_b // per_seg_cores)
+        evicted = same_segment and 2 * array_bytes > seg_size
+        if evicted:
+            return self._lat(self._next_latency(lvl), self.mem_noise, n_samples)
+        return self._lat(lvl.latency, lvl.noise, n_samples)
+
+    def sharing_probe(self, space_a: str, space_b: str, array_bytes: int,
+                      n_samples: int) -> np.ndarray:
+        """Step-3 latencies of the Physical Sharing workflow (§IV-G):
+        spaces on the same physical cache evict each other."""
+        la, lb = self.level(space_a), self.level(space_b)
+        shared = la.group == lb.group
+        evicted = shared and 2 * array_bytes > la.size
+        if evicted:
+            return self._lat(self._next_latency(la), self.mem_noise, n_samples)
+        return self._lat(la.latency, la.noise, n_samples)
+
+    def cu_sharing_probe(self, cu_a: int, cu_b: int, array_bytes: int,
+                         n_samples: int, space: str = "sL1d") -> np.ndarray:
+        """AMD-style sL1d sharing across CU ids (§IV-H)."""
+        lvl = self.level(space)
+        group_of = {}
+        for gi, grp in enumerate(self.cu_share_groups):
+            for cu in grp:
+                group_of[cu] = gi
+        shared = (cu_a in group_of and cu_b in group_of
+                  and group_of[cu_a] == group_of[cu_b] and cu_a != cu_b)
+        evicted = shared and 2 * array_bytes > lvl.size
+        if evicted:
+            return self._lat(self._next_latency(lvl), self.mem_noise, n_samples)
+        return self._lat(lvl.latency, lvl.noise, n_samples)
+
+    def bandwidth(self, space: str, mode: str = "read") -> float:
+        table = self.read_bw if mode == "read" else self.write_bw
+        base = table.get(space)
+        if base is None:
+            raise KeyError(f"{self.name}: no {mode} bandwidth for '{space}'")
+        return float(base * self._rng.normal(1.0, 0.02))
+
+    # ------------------------------------------------------ ground truth
+    def ground_truth(self) -> dict[str, dict]:
+        gt = {}
+        for l in self.levels:
+            gt[l.name] = {
+                "size": l.size, "latency": l.latency, "line_size": l.line_size,
+                "fetch_granularity": l.fetch_granularity, "amount": l.amount,
+                "physical_group": l.group, "scope": l.scope,
+            }
+        gt["DeviceMemory"] = {"latency": self.mem_latency}
+        return gt
+
+
+# --------------------------------------------------------------------------
+# Virtual devices mirroring paper Table III ground truth.
+# --------------------------------------------------------------------------
+
+def make_h100_like(seed: int = 0) -> SimDevice:
+    """NVIDIA H100-like hierarchy (paper Table III, top)."""
+    kib, mib, gib = 1024, 1024**2, 1024**3
+    levels = [
+        SimLevel("ConstL1", 2 * kib, 21.0, 64, 64, noise=0.8,
+                 physical_group="const-path", path="const"),
+        SimLevel("ConstL1.5", 64 * kib, 105.0, 256, 256, noise=2.0,
+                 physical_group="const-path15", path="const"),
+        SimLevel("L1", 238 * kib, 38.0, 128, 32, noise=1.5,
+                 physical_group="unified-l1"),
+        SimLevel("Texture", 238 * kib, 39.0, 128, 32, noise=1.5,
+                 physical_group="unified-l1"),
+        SimLevel("Readonly", 238 * kib, 35.0, 128, 32, noise=1.5,
+                 physical_group="unified-l1"),
+        SimLevel("SharedMem", 228 * kib, 30.0, 4, 4, noise=0.6,
+                 kind="scratchpad"),
+        SimLevel("L2", 50 * mib, 220.0, 128, 32, amount=2, scope="chip",
+                 noise=6.0),
+    ]
+    return SimDevice(
+        name="sim-h100", vendor="NVIDIA", levels=levels,
+        mem_latency=843.0, mem_noise=25.0,
+        read_bw={"L2": 4.4e12, "DeviceMemory": 2.5e12},
+        write_bw={"L2": 3.4e12, "DeviceMemory": 2.7e12},
+        cores_per_sm=128,
+        space_of_level={"global": "L1", "DeviceMemory": "L2"},
+        seed=seed,
+    )
+
+
+def make_mi210_like(seed: int = 0) -> SimDevice:
+    """AMD MI210-like hierarchy (paper Table III, bottom). 104 active CUs out
+    of 128 physical ids -> some CUs have exclusive sL1d (paper §IV-H)."""
+    kib, mib = 1024, 1024**2
+    levels = [
+        SimLevel("vL1", 16 * kib, 125.0, 64, 64, noise=2.0),
+        SimLevel("sL1d", 16 * kib, 50.0, 64, 64, noise=1.0),
+        SimLevel("LDS", 64 * kib, 55.0, 4, 4, noise=0.8, kind="scratchpad"),
+        SimLevel("L2", 8 * mib, 310.0, 128, 64, amount=1, scope="chip",
+                 noise=8.0),
+    ]
+    # Physical CU ids 0..127 in pairs sharing sL1d; ids >= 104 inactive, and a
+    # few odd ids disabled so their partner has exclusive sL1d.
+    groups, disabled = [], {9, 33, 57, 81}
+    for base in range(0, 104, 2):
+        pair = [cu for cu in (base, base + 1) if cu not in disabled]
+        groups.append(pair)
+    return SimDevice(
+        name="sim-mi210", vendor="AMD", levels=levels,
+        mem_latency=748.0, mem_noise=20.0,
+        read_bw={"L2": 4.19e12, "DeviceMemory": 1.0e12},
+        write_bw={"L2": 2.4e12, "DeviceMemory": 0.9e12},
+        cores_per_sm=64,
+        cu_share_groups=groups,
+        space_of_level={"global": "vL1", "DeviceMemory": "L2"},
+        seed=seed,
+    )
+
+
+def make_v5e_like(seed: int = 0) -> SimDevice:
+    """TPU v5e-like hierarchy: compiler-managed VMEM + CMEM-less HBM path.
+
+    TPUs have no hardware-managed data cache between VMEM and HBM; the "size
+    cliff" the probes detect is the VMEM working-set limit (DESIGN.md §2,
+    adaptation note 2)."""
+    mib = 1024**2
+    levels = [
+        SimLevel("SMEM", 1 * mib // 8, 8.0, 4, 4, noise=0.3, kind="scratchpad"),
+        SimLevel("VMEM", 16 * mib, 20.0, 512, 512, noise=0.8,
+                 kind="scratchpad"),
+    ]
+    return SimDevice(
+        name="sim-v5e", vendor="Google", levels=levels,
+        mem_latency=500.0, mem_noise=15.0,
+        read_bw={"VMEM": 20e12, "DeviceMemory": 0.819e12},
+        write_bw={"VMEM": 20e12, "DeviceMemory": 0.78e12},
+        cores_per_sm=1,
+        space_of_level={"global": "VMEM", "DeviceMemory": "VMEM"},
+        seed=seed,
+    )
+
+
+SIM_DEVICES = {
+    "sim-h100": make_h100_like,
+    "sim-mi210": make_mi210_like,
+    "sim-v5e": make_v5e_like,
+}

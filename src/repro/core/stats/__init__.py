@@ -1,0 +1,12 @@
+"""Statistical auto-evaluation machinery (paper contribution C3)."""
+from .ks import KSResult, ks_2samp, ks_critical_value, ks_pvalue, ks_statistic
+from .reduction import geometric_reduction, reduce_rows
+from .cpd import ChangePoint, cusum_change_point, ks_change_point, pelt_segments
+from .outliers import OutlierReport, boundary_suspect, detect_outliers, winsorize
+
+__all__ = [
+    "KSResult", "ks_2samp", "ks_critical_value", "ks_pvalue", "ks_statistic",
+    "geometric_reduction", "reduce_rows",
+    "ChangePoint", "cusum_change_point", "ks_change_point", "pelt_segments",
+    "OutlierReport", "boundary_suspect", "detect_outliers", "winsorize",
+]

@@ -1,0 +1,60 @@
+"""Outlier handling for probe sweeps (paper §IV-B workflow step 3).
+
+MT4G checks raw sweep results for outliers — e.g. a cache boundary sitting at
+the edge of the searched interval, or a disturbance spike — and widens the
+search interval / re-measures when they are found. These helpers implement the
+decision logic; the re-measurement loop lives in ``core.probes.size``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["OutlierReport", "detect_outliers", "boundary_suspect", "winsorize"]
+
+
+@dataclass(frozen=True)
+class OutlierReport:
+    indices: np.ndarray        # indices flagged as outliers
+    fraction: float            # |outliers| / n
+    lo_fence: float
+    hi_fence: float
+
+    @property
+    def any(self) -> bool:
+        return self.indices.size > 0
+
+
+def detect_outliers(series: np.ndarray, k: float = 3.0) -> OutlierReport:
+    """Tukey-fence outlier detection on a 1-D series (k=3 -> 'far out')."""
+    s = np.asarray(series, dtype=np.float64).ravel()
+    if s.size < 4:
+        return OutlierReport(np.zeros(0, np.int64), 0.0, -np.inf, np.inf)
+    q1, q3 = np.percentile(s, [25, 75])
+    iqr = max(q3 - q1, 1e-12)
+    lo, hi = q1 - k * iqr, q3 + k * iqr
+    idx = np.where((s < lo) | (s > hi))[0]
+    return OutlierReport(idx, idx.size / s.size, float(lo), float(hi))
+
+
+def boundary_suspect(series: np.ndarray, edge: int = 2, k: float = 3.0) -> bool:
+    """True if a distribution change sits suspiciously close to the interval
+    edge (paper: 'outliers, especially ones caused by cache sizes close to one
+    of the boundaries') — signals the caller to widen the interval."""
+    s = np.asarray(series, dtype=np.float64).ravel()
+    if s.size < 2 * edge + 2:
+        return False
+    rep = detect_outliers(s, k=k)
+    if not rep.any:
+        return False
+    n = s.size
+    return bool(np.any(rep.indices < edge) or np.any(rep.indices >= n - edge))
+
+
+def winsorize(series: np.ndarray, pct: float = 1.0) -> np.ndarray:
+    """Clamp the extreme ``pct`` percent on each tail (used before CUSUM,
+    which unlike K-S is not outlier-robust)."""
+    s = np.asarray(series, dtype=np.float64).ravel()
+    lo, hi = np.percentile(s, [pct, 100.0 - pct])
+    return np.clip(s, lo, hi)

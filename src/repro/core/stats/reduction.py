@@ -1,0 +1,50 @@
+"""Dimensionality reduction for multi-dimensional probe results (paper eq. 2).
+
+Each probe configuration i (e.g. one p-chase array size) yields a vector of N
+per-load latencies r_{i,0..N-1}. MT4G reduces each vector to one scalar with
+the geometrically inspired mapping of Grundy et al.:
+
+    S_i = sqrt( sum_j (r_ij - min(r))^2 )
+
+where min(r) is the *global* minimum over the whole 2-D result array. The
+reduced 1-D series S is what the K-S change-point detector consumes. Compared
+to mean/max, the mapping amplifies distribution-shape changes while staying
+robust to single outliers (paper Fig. 2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["geometric_reduction", "reduce_rows"]
+
+
+def geometric_reduction(results: np.ndarray, global_min: float | None = None) -> np.ndarray:
+    """Reduce a (num_configs, N) latency array to a (num_configs,) series.
+
+    ``global_min`` can be supplied when reducing incrementally (e.g. while the
+    search interval is being widened) so all chunks share one reference.
+    """
+    r = np.asarray(results, dtype=np.float64)
+    if r.ndim == 1:
+        r = r[None, :]
+    if r.ndim != 2:
+        raise ValueError(f"expected 2-D (configs, samples), got shape {r.shape}")
+    gmin = float(np.min(r)) if global_min is None else float(global_min)
+    return np.sqrt(np.sum((r - gmin) ** 2, axis=1))
+
+
+def reduce_rows(rows: list[np.ndarray]) -> np.ndarray:
+    """Reduce ragged per-config latency vectors (lengths may differ).
+
+    Rows are normalized by sqrt(N) so configs measured with different sample
+    counts remain comparable; with equal lengths this is a monotone rescale of
+    eq. 2 and leaves the K-S change point unchanged.
+    """
+    if not rows:
+        return np.zeros((0,))
+    gmin = min(float(np.min(np.asarray(r))) for r in rows if np.asarray(r).size)
+    out = np.empty(len(rows))
+    for i, row in enumerate(rows):
+        row = np.asarray(row, dtype=np.float64)
+        out[i] = np.sqrt(np.sum((row - gmin) ** 2) / max(row.size, 1))
+    return out

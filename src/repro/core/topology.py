@@ -1,0 +1,231 @@
+"""Backend-agnostic topology data model (paper contribution C1).
+
+MT4G unifies NVIDIA and AMD reports into one schema covering general,
+compute, and memory information (paper §III). We keep that schema and extend
+it with interconnect links, because on a TPU pod the ICI/DCN fabric is the
+dominant "memory element" between chips.
+
+Every attribute records its *provenance* — ``api`` (read from an interface),
+``benchmark`` (reverse-engineered via probes), ``catalog`` (vendor datasheet)
+— and benchmark-derived attributes carry the confidence metric emitted by the
+K-S change-point machinery, mirroring the paper's reporting.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any
+
+__all__ = [
+    "Attribute", "MemoryElement", "ComputeElement", "Link", "Topology",
+    "PROVENANCE_API", "PROVENANCE_BENCHMARK", "PROVENANCE_CATALOG",
+]
+
+PROVENANCE_API = "api"
+PROVENANCE_BENCHMARK = "benchmark"
+PROVENANCE_CATALOG = "catalog"
+
+
+@dataclass
+class Attribute:
+    """One measured/reported attribute with provenance + confidence."""
+
+    value: Any
+    unit: str = ""
+    provenance: str = PROVENANCE_BENCHMARK
+    confidence: float | None = None  # None for API/catalog values
+
+    def to_json(self) -> dict:
+        d = {"value": self.value, "unit": self.unit, "provenance": self.provenance}
+        if self.confidence is not None:
+            d["confidence"] = round(float(self.confidence), 4)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Attribute":
+        return cls(d["value"], d.get("unit", ""), d.get("provenance", PROVENANCE_BENCHMARK),
+                   d.get("confidence"))
+
+
+@dataclass
+class MemoryElement:
+    """A cache/scratchpad/memory level (paper Table I rows)."""
+
+    name: str                       # e.g. "L1", "HBM", "VMEM", "sL1d"
+    kind: str                       # "cache" | "scratchpad" | "memory"
+    scope: str                      # "core" | "chip" | "host" | "pod"
+    attrs: dict[str, Attribute] = field(default_factory=dict)
+    # Paper: "Physically Shared With" — names of logical spaces / peer ids
+    shared_with: list[str] = field(default_factory=list)
+
+    def set(self, key: str, value: Any, unit: str = "",
+            provenance: str = PROVENANCE_BENCHMARK,
+            confidence: float | None = None) -> None:
+        self.attrs[key] = Attribute(value, unit, provenance, confidence)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        a = self.attrs.get(key)
+        return default if a is None else a.value
+
+
+@dataclass
+class ComputeElement:
+    """A compute grouping (chip, core, MXU; SM/CU on the GPU side)."""
+
+    name: str
+    count: int
+    attrs: dict[str, Attribute] = field(default_factory=dict)
+
+    def set(self, key: str, value: Any, unit: str = "",
+            provenance: str = PROVENANCE_API,
+            confidence: float | None = None) -> None:
+        self.attrs[key] = Attribute(value, unit, provenance, confidence)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        a = self.attrs.get(key)
+        return default if a is None else a.value
+
+
+@dataclass
+class Link:
+    """An interconnect edge (ICI link, DCN path, PCIe, or on-chip bus)."""
+
+    name: str                       # "ici", "dcn", "pcie"
+    endpoints: tuple[str, str]      # logical endpoint ids
+    attrs: dict[str, Attribute] = field(default_factory=dict)
+
+    def set(self, key: str, value: Any, unit: str = "",
+            provenance: str = PROVENANCE_BENCHMARK,
+            confidence: float | None = None) -> None:
+        self.attrs[key] = Attribute(value, unit, provenance, confidence)
+
+
+@dataclass
+class Topology:
+    """Full device topology report (the MT4G JSON equivalent)."""
+
+    vendor: str = ""
+    model: str = ""
+    backend: str = ""               # "cpu" | "tpu" | "simulated:<name>"
+    general: dict[str, Attribute] = field(default_factory=dict)
+    compute: list[ComputeElement] = field(default_factory=list)
+    memory: list[MemoryElement] = field(default_factory=list)
+    links: list[Link] = field(default_factory=list)
+    notes: list[str] = field(default_factory=list)
+
+    # ------------------------------------------------------------- access
+    def set_general(self, key: str, value: Any, unit: str = "",
+                    provenance: str = PROVENANCE_API) -> None:
+        self.general[key] = Attribute(value, unit, provenance)
+
+    def find_memory(self, name: str) -> MemoryElement | None:
+        for m in self.memory:
+            if m.name == name:
+                return m
+        return None
+
+    def find_compute(self, name: str) -> ComputeElement | None:
+        for c in self.compute:
+            if c.name == name:
+                return c
+        return None
+
+    # ------------------------------------------------------ serialization
+    def to_json(self) -> dict:
+        return {
+            "vendor": self.vendor,
+            "model": self.model,
+            "backend": self.backend,
+            "general": {k: v.to_json() for k, v in self.general.items()},
+            "compute": [
+                {"name": c.name, "count": c.count,
+                 "attrs": {k: v.to_json() for k, v in c.attrs.items()}}
+                for c in self.compute
+            ],
+            "memory": [
+                {"name": m.name, "kind": m.kind, "scope": m.scope,
+                 "shared_with": m.shared_with,
+                 "attrs": {k: v.to_json() for k, v in m.attrs.items()}}
+                for m in self.memory
+            ],
+            "links": [
+                {"name": l.name, "endpoints": list(l.endpoints),
+                 "attrs": {k: v.to_json() for k, v in l.attrs.items()}}
+                for l in self.links
+            ],
+            "notes": self.notes,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Topology":
+        topo = cls(vendor=d.get("vendor", ""), model=d.get("model", ""),
+                   backend=d.get("backend", ""))
+        topo.general = {k: Attribute.from_json(v) for k, v in d.get("general", {}).items()}
+        for c in d.get("compute", []):
+            ce = ComputeElement(c["name"], c["count"])
+            ce.attrs = {k: Attribute.from_json(v) for k, v in c.get("attrs", {}).items()}
+            topo.compute.append(ce)
+        for m in d.get("memory", []):
+            me = MemoryElement(m["name"], m["kind"], m["scope"],
+                               shared_with=list(m.get("shared_with", [])))
+            me.attrs = {k: Attribute.from_json(v) for k, v in m.get("attrs", {}).items()}
+            topo.memory.append(me)
+        for l in d.get("links", []):
+            le = Link(l["name"], tuple(l["endpoints"]))
+            le.attrs = {k: Attribute.from_json(v) for k, v in l.get("attrs", {}).items()}
+            topo.links.append(le)
+        topo.notes = list(d.get("notes", []))
+        return topo
+
+    def dumps(self, indent: int = 2) -> str:
+        return json.dumps(self.to_json(), indent=indent)
+
+    @classmethod
+    def loads(cls, s: str) -> "Topology":
+        return cls.from_json(json.loads(s))
+
+    # --------------------------------------------------- human-readable md
+    def to_markdown(self) -> str:
+        lines = [f"# Topology report: {self.vendor} {self.model} ({self.backend})", ""]
+        if self.general:
+            lines += ["## General", ""]
+            for k, v in self.general.items():
+                lines.append(f"- **{k}**: {v.value} {v.unit} _[{v.provenance}]_")
+            lines.append("")
+        if self.compute:
+            lines += ["## Compute", ""]
+            for c in self.compute:
+                lines.append(f"- **{c.name}** ×{c.count}")
+                for k, v in c.attrs.items():
+                    lines.append(f"  - {k}: {v.value} {v.unit} _[{v.provenance}]_")
+            lines.append("")
+        if self.memory:
+            lines += ["## Memory", "",
+                      "| element | kind | scope | " +
+                      " | ".join(["size", "load_latency", "read_bw", "write_bw",
+                                  "line_size", "fetch_granularity", "amount"]) +
+                      " | shared_with |",
+                      "|---|---|---|---|---|---|---|---|---|---|"]
+            for m in self.memory:
+                cells = []
+                for key in ("size", "load_latency", "read_bw", "write_bw",
+                            "line_size", "fetch_granularity", "amount"):
+                    a = m.attrs.get(key)
+                    if a is None:
+                        cells.append("–")
+                    else:
+                        conf = f" (c={a.confidence:.2f})" if a.confidence is not None else ""
+                        cells.append(f"{a.value}{a.unit}{conf}")
+                shared = ",".join(m.shared_with) or "n/a"
+                lines.append(f"| {m.name} | {m.kind} | {m.scope} | " +
+                             " | ".join(cells) + f" | {shared} |")
+            lines.append("")
+        if self.links:
+            lines += ["## Links", ""]
+            for l in self.links:
+                attrs = ", ".join(f"{k}={v.value}{v.unit}" for k, v in l.attrs.items())
+                lines.append(f"- {l.name} {l.endpoints[0]}↔{l.endpoints[1]}: {attrs}")
+            lines.append("")
+        if self.notes:
+            lines += ["## Notes", ""] + [f"- {n}" for n in self.notes]
+        return "\n".join(lines)

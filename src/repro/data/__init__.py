@@ -1,0 +1,3 @@
+from .pipeline import ByteCorpus, DataConfig, SyntheticLM
+
+__all__ = ["ByteCorpus", "DataConfig", "SyntheticLM"]

@@ -1,0 +1,5 @@
+from .supervisor import (FailureInjector, RestartExhausted, StragglerDetector,
+                         Supervisor)
+
+__all__ = ["FailureInjector", "RestartExhausted", "StragglerDetector",
+           "Supervisor"]

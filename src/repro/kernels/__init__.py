@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute paths + probe kernels.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+with jit'd wrappers in ops.py and pure-jnp oracles in ref.py.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,45 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True in this CPU container; on a TPU fleet the
+launcher flips it to False (the kernels carry explicit BlockSpec tilings and
+MXU-aligned block shapes for that path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .pchase_probe import pchase_kernel
+from .rwkv6_scan import wkv6_chunked_kernel
+from .stream_probe import stream_read_kernel, stream_write_kernel
+
+__all__ = ["mha", "wkv6", "stream_read", "stream_write", "pchase"]
+
+
+def mha(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=True):
+    """Flash attention over (B, S, H, d) activations (model layout)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(qt, kt, vt, causal=causal, block_q=block_q,
+                          block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def wkv6(r, k, v, w, u, *, chunk=32, interpret=True):
+    """Chunked WKV6 over (B, T, H, K) activations; returns (y, state)."""
+    return wkv6_chunked_kernel(r, k, v, w, u, chunk=chunk,
+                               interpret=interpret)
+
+
+def stream_read(x, *, block=64 * 1024, interpret=True):
+    return stream_read_kernel(x, block=block, interpret=interpret)
+
+
+def stream_write(x, *, block=64 * 1024, interpret=True):
+    return stream_write_kernel(x, block=block, interpret=interpret)
+
+
+def pchase(perm, *, iters, interpret=True):
+    return pchase_kernel(perm, iters=iters, interpret=interpret)

@@ -1,0 +1,48 @@
+"""Pointer-chase probe — Pallas TPU kernel (paper §IV-A, TPU-native).
+
+The GPU p-chase reads a per-load cycle counter; TPU Pallas has no in-kernel
+clock (DESIGN.md adaptation note 1), so the kernel executes a dependent-load
+chain of known length and the *caller* times the whole call: ns/load =
+wall / iters, and the latency distribution is built across repetitions.
+
+The chase array is a random single cycle (Sattolo) so hardware prefetchers
+cannot run ahead; the chain is serialized by construction (each load's
+address is the previous load's value). Output returns the final cursor and
+a visit checksum so the chain cannot be dead-code-eliminated; both are also
+the correctness contract checked against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pchase_kernel"]
+
+
+def _kernel(perm_ref, out_ref, *, iters: int):
+    def body(_, carry):
+        cursor, checksum = carry
+        nxt = perm_ref[cursor]
+        return nxt, checksum + nxt
+
+    cursor, checksum = jax.lax.fori_loop(
+        0, iters, body, (jnp.int32(0), jnp.int32(0)))
+    out_ref[0] = cursor
+    out_ref[1] = checksum
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def pchase_kernel(perm: jax.Array, *, iters: int,
+                  interpret: bool = True) -> jax.Array:
+    """perm (N,) int32 single-cycle permutation -> [final_cursor, checksum]."""
+    return pl.pallas_call(
+        functools.partial(_kernel, iters=iters),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(perm.shape, lambda i: (0,))],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.int32),
+        interpret=interpret,
+    )(perm)

@@ -1,0 +1,66 @@
+"""Stream bandwidth probe — Pallas TPU kernel (paper §IV-I, TPU-native).
+
+MT4G's bandwidth benchmark issues wide vector loads from many threads; the
+TPU-native equivalent streams HBM->VMEM tiles across a grid sized to keep
+the DMA engines saturated (DESIGN.md adaptation note 4). Two modes:
+
+  * read  — per-tile reduction (one f32 out per tile: bytes in, ~0 out);
+  * write — tile copy (bytes in == bytes out), measuring write bandwidth
+            together with read.
+
+On hardware the wall clock around ``ops.stream_read/write`` divided into
+bytes gives GB/s; in this container the kernels are validated for
+correctness in interpret mode and the HostRunner measures real bandwidth
+with jitted XLA ops instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["stream_read_kernel", "stream_write_kernel"]
+
+
+def _read_kernel(x_ref, out_ref):
+    out_ref[0] = jnp.sum(x_ref[...].astype(jnp.float32))
+
+
+def _write_kernel(x_ref, y_ref):
+    y_ref[...] = x_ref[...] + jnp.asarray(1, x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def stream_read_kernel(x: jax.Array, *, block: int = 64 * 1024,
+                       interpret: bool = True) -> jax.Array:
+    """x (N,) -> per-block partial sums (N // block,). N % block == 0."""
+    n = x.shape[0]
+    assert n % block == 0
+    grid = (n // block,)
+    return pl.pallas_call(
+        _read_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // block,), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def stream_write_kernel(x: jax.Array, *, block: int = 64 * 1024,
+                        interpret: bool = True) -> jax.Array:
+    """x (N,) -> x + 1, streamed tile-by-tile (read+write bytes)."""
+    n = x.shape[0]
+    assert n % block == 0
+    grid = (n // block,)
+    return pl.pallas_call(
+        _write_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x)

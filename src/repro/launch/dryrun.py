@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). The CI small-mesh test overrides the count via
+# REPRO_DRYRUN_DEVICES before jax is imported; still prior to any import.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run (assignment deliverable (e)+(f)+(g) input).
+
+For every (architecture x input shape) cell and mesh:
+  * build the step function the shape implies (train_step / prefill /
+    serve_step) with production runtime knobs (remat, microbatching,
+    chunked attention);
+  * attach NamedShardings from the divisibility-aware rules to every input
+    ShapeDtypeStruct (params, optimizer state, batch, caches);
+  * ``jit(...).lower(...).compile()`` — success proves the distribution
+    config is coherent; failures are bugs;
+  * record memory_analysis / cost_analysis / collective bytes into
+    ``artifacts/dryrun/<mesh>/<arch>__<shape>.json`` for §Dry-run and the
+    roofline analyzer.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch qwen3-14b
+  PYTHONPATH=src python -m repro.launch.dryrun --all --skip-existing
+"""
+import argparse
+import json
+import time
+import traceback
+
+__all__ = ["run_cell", "cells_for", "pick_microbatches", "main"]
+
+SKIP_LONG_FULL_ATTN = "long_500k needs sub-quadratic attention; pure " \
+    "full-attention arch — skipped per assignment (see DESIGN.md §4)"
+
+
+def cells_for(arch_names, shape_names):
+    """Yield runnable (arch, shape) cells, honoring the long_500k rule."""
+    from ..configs import get_config, shape_for
+
+    for a in arch_names:
+        cfg = get_config(a)
+        for s in shape_names:
+            shape = shape_for(s)
+            if s == "long_500k" and not cfg.subquadratic:
+                yield (a, s, SKIP_LONG_FULL_ATTN)
+                continue
+            yield (a, s, None)
+
+
+def pick_microbatches(cfg, shape, mesh) -> int:
+    """Gradient-accumulation factor for the train cells: target ~1 sequence
+    per data shard per microbatch for wide models (bounds activation + MoE
+    dispatch memory), 4 for narrow ones."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_shards = sizes.get("data", 1) * sizes.get("pod", 1)
+    per_dev = max(shape.global_batch // data_shards, 1)
+    target = 1 if (cfg.d_model >= 4096 or cfg.family == "moe") else 4
+    mb = max(per_dev // target, 1)
+    while shape.global_batch % mb != 0:
+        mb -= 1
+    return max(mb, 1)
+
+
+def _with_shardings(shape_tree, logical_tree, rules, mesh):
+    import jax
+    from ..sharding import tree_shardings
+
+    sh = tree_shardings(shape_tree, logical_tree, rules, mesh)
+    return jax.tree.map(
+        lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+        shape_tree, sh)
+
+
+def _batch_logical(cfg, batch_shapes):
+    """Logical axes for each input tensor of the batch."""
+    out = {}
+    for name, sds in batch_shapes.items():
+        nd = len(sds.shape)
+        out[name] = ("batch",) + ("",) * (nd - 1)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, runtime=None,
+               overrides: dict | None = None):
+    """Returns (step_fn, example_args_with_shardings, meta).
+
+    ``overrides`` (perf-iteration knobs, see EXPERIMENTS.md §Perf):
+      rules         — replace the Rules object (sharding layout variants)
+      microbatches  — grad-accumulation factor for train cells
+      runtime       — models.Runtime (remat / q_chunk / kernels)
+    """
+    overrides = overrides or {}
+    import jax
+    from ..configs import get_config, shape_for
+    from ..models import Runtime, get_model
+    from ..sharding import SERVE_RULES, TRAIN_RULES
+    from ..train.optimizer import OptConfig, init_opt_state, opt_state_specs
+    from ..train.train_loop import TrainConfig, make_train_step
+
+    from ..sharding.context import activation_sharding
+
+    cfg = get_config(arch)
+    shape = shape_for(shape_name)
+    model = get_model(cfg)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind}
+
+    def _ctx(fn, rules):
+        """Trace the step under the activation-sharding context so the
+        models' constrain() calls anchor batch/vocab/expert layouts."""
+        def wrapped(*a, **k):
+            with activation_sharding(mesh, rules):
+                return fn(*a, **k)
+        return wrapped
+
+    if shape.kind == "train":
+        rules = overrides.get("rules", TRAIN_RULES)
+        mb = overrides.get("microbatches") or pick_microbatches(cfg, shape, mesh)
+        meta["microbatches"] = mb
+        rt = overrides.get("runtime") or runtime or Runtime(q_chunk=1024,
+                                                            remat="full")
+        oc = OptConfig(master_f32=True)
+        tc = TrainConfig(opt=oc, microbatches=mb, runtime=rt)
+        step = _ctx(make_train_step(model, tc), rules)
+
+        pshapes = model.param_shapes()
+        plogical = model.param_specs()
+        oshapes = jax.eval_shape(lambda p: init_opt_state(p, oc), pshapes)
+        ological = opt_state_specs(plogical, oc,
+                                   has_master="master" in oshapes)
+        state_shapes = {"params": pshapes, "opt": oshapes}
+        state_logical = {"params": plogical, "opt": ological}
+        state_in = _with_shardings(state_shapes, state_logical, rules, mesh)
+
+        bshapes = model.input_specs(shape)
+        batch_in = _with_shardings(bshapes, _batch_logical(cfg, bshapes),
+                                   rules, mesh)
+        state_sh = jax.tree.map(lambda x: x.sharding, state_in)
+        meta["jit"] = {"out_shardings": (state_sh, None),
+                       "donate_argnums": (0,)}
+        return step, (state_in, batch_in), meta
+
+    rules = overrides.get("rules", SERVE_RULES)
+    rt = overrides.get("runtime") or runtime or Runtime(q_chunk=1024)
+    pshapes = model.param_shapes()
+    plogical = model.param_specs()
+    params_in = _with_shardings(pshapes, plogical, rules, mesh)
+    bshapes = model.input_specs(shape)
+    batch_in = _with_shardings(bshapes, _batch_logical(cfg, bshapes),
+                               rules, mesh)
+
+    cache_shapes = model.cache_input_specs(shape)
+    if overrides.get("cache_dtype"):
+        import jax.numpy as jnp
+        dt = getattr(jnp, overrides["cache_dtype"])
+        cache_shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, dt if x.dtype == jnp.bfloat16 else x.dtype),
+            cache_shapes)
+    cache_in = _with_shardings(cache_shapes, model.cache_specs(), rules, mesh)
+    cache_sh = jax.tree.map(lambda x: x.sharding, cache_in)
+
+    if shape.kind == "prefill":
+        step = _ctx(
+            lambda p, b: model.prefill(p, b, max_len=shape.seq_len, rt=rt),
+            rules)
+        # Pin the returned KV cache to the serve layout (seq over "model"),
+        # otherwise the compiler replicates the 100+GB cache output.
+        meta["jit"] = {"out_shardings": (None, cache_sh)}
+        return step, (params_in, batch_in), meta
+
+    # decode / long-context decode: one new token vs a filled cache.
+    step = _ctx(lambda p, b, c: model.decode_step(p, b, c, rt=rt), rules)
+    meta["jit"] = {"out_shardings": (None, cache_sh)}
+    if not overrides.get("no_donate"):
+        meta["jit"]["donate_argnums"] = (2,)
+    return step, (params_in, batch_in, cache_in), meta
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             hlo_dir: str | None = None, overrides: dict | None = None) -> dict:
+    """Lower + compile one cell; return the artifact dict."""
+    import jax
+    from ..analysis.hlo import parse_collectives
+    from ..analysis.hlo_cost import analyze_hlo
+
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "devices": int(mesh.devices.size), "ok": False}
+    try:
+        step, args, meta = build_cell(arch, shape_name, mesh,
+                                      overrides=overrides)
+        jit_kw = meta.pop("jit", {})
+        record.update(meta)
+        with mesh:
+            lowered = jax.jit(step, **jit_kw).lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        ma = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_estimate_bytes": int(ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       - ma.alias_size_in_bytes),
+        }
+        cost = compiled.cost_analysis()
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))}
+        txt = compiled.as_text()
+        record["collectives"] = parse_collectives(txt).to_json()
+        # Trip-count-aware accounting (scan bodies x their trip counts):
+        # the roofline reads these, not raw cost_analysis (see hlo_cost.py).
+        record["hlo_cost"] = analyze_hlo(txt).to_json()
+        record["hlo_bytes"] = len(txt)
+        record["timings"] = {"lower_s": round(t_lower - t0, 2),
+                             "compile_s": round(t_compile - t_lower, 2)}
+        record["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, don't die
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_s"] = round(time.time() - t0, 2)
+    return record
+
+
+def main(argv=None) -> int:
+    from ..configs import ARCHS, SHAPES
+    from .mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch id (repeatable); default: all")
+    ap.add_argument("--shape", action="append", default=None,
+                    help="shape name (repeatable); default: all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all archs x shapes x both meshes")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or sorted(ARCHS)
+    shapes = args.shape or list(SHAPES)
+    meshes = ["single", "multi"] if (args.mesh == "both" or args.all) \
+        else [args.mesh]
+
+    failures = 0
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        out_dir = os.path.join(args.out, mesh_name)
+        os.makedirs(out_dir, exist_ok=True)
+        for arch, shape, skip in cells_for(archs, shapes):
+            path = os.path.join(out_dir, f"{arch}__{shape}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip-existing] {mesh_name}/{arch}/{shape}")
+                continue
+            if skip is not None:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "skipped": skip, "ok": True},
+                          open(path, "w"), indent=1)
+                print(f"[skipped] {mesh_name}/{arch}/{shape}: long_500k rule")
+                continue
+            print(f"[run] {mesh_name}/{arch}/{shape} ...", flush=True)
+            rec = run_cell(arch, shape, mesh, mesh_name)
+            json.dump(rec, open(path, "w"), indent=1)
+            status = "OK" if rec["ok"] else f"FAIL ({rec.get('error')})"
+            print(f"  -> {status} in {rec['total_s']}s "
+                  f"(compile {rec.get('timings', {}).get('compile_s', '-')}s)",
+                  flush=True)
+            failures += 0 if rec["ok"] else 1
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,46 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN step 1).
+
+Defined as functions so importing this module never touches jax device
+state. The "pod" axis is the cross-DCN data-parallel dimension; "data" is
+the intra-pod FSDP/DP axis; "model" the tensor/expert-parallel axis kept on
+ICI. ``make_subslice_mesh`` is the MIG-analogue used by the elastic-resize
+path (paper §VI-C: topology-aware dynamic partitioning).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_subslice_mesh", "make_debug_mesh"]
+
+
+def _axis_types(n):
+    import jax
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+
+
+def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for the in-CI dry-run test (8 forced host devices)."""
+    import jax
+
+    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+
+
+def make_subslice_mesh(base_shape=(16, 16), drop_data_rows: int = 8,
+                       axes=("data", "model")):
+    """Elastic resize: rebuild a mesh after losing ``drop_data_rows`` of the
+    data axis (the checkpointer reshards state onto it)."""
+    import jax
+
+    new_shape = (base_shape[0] - drop_data_rows, base_shape[1])
+    n = int(np.prod(new_shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(new_shape)
+    return jax.sharding.Mesh(devices, axes,
+                             axis_types=_axis_types(len(axes)))

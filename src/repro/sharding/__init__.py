@@ -1,0 +1,7 @@
+from .specs import (Rules, SERVE_RULES, TRAIN_RULES, batch_spec, resolve_spec,
+                    tree_shardings, tree_specs)
+from .context import activation_sharding, constrain
+
+__all__ = ["Rules", "SERVE_RULES", "TRAIN_RULES", "batch_spec",
+           "resolve_spec", "tree_shardings", "tree_specs",
+           "activation_sharding", "constrain"]

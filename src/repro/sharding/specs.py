@@ -1,0 +1,168 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallbacks.
+
+Models annotate every parameter / cache / activation dimension with a logical
+axis name (models/common.py). This module maps those names onto the physical
+mesh ("pod", "data", "model") with MT4G's philosophy applied to distribution:
+*measure, don't assume* — a rule is applied only if the dimension is actually
+divisible by the mesh axes, otherwise the next-best subset of axes is used,
+and replication is the final fallback. This is what lets one rule set cover
+40-head and 8-head models on the same (16, 16) mesh.
+
+Two rule sets:
+  * TRAIN — FSDP-style: "embed" rows over the data axis (ZeRO-3-ish weight
+    sharding), tensor-parallel columns over "model", experts over "data".
+  * SERVE — weights replicated over "data" for throughput (except experts,
+    which must stay sharded to fit 235B), KV-cache sequence over "model"
+    (flash-decoding style).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "TRAIN_RULES", "SERVE_RULES", "resolve_spec",
+           "tree_specs", "tree_shardings", "batch_spec"]
+
+
+@dataclass(frozen=True)
+class Rules:
+    name: str
+    mapping: dict[str, tuple[str, ...]] = field(default_factory=dict)
+    # Cross-dim fallback: when no dim of a tensor could take the "model"
+    # axis (e.g. 40 heads on a 16-wide axis), allow an "embed" dim to carry
+    # it in addition to its own axes — row-parallel attention instead of
+    # replicated attention compute (EXPERIMENTS.md §Perf, hillclimb C).
+    model_fallback: bool = False
+
+    def axes_for(self, logical: str) -> tuple[str, ...]:
+        return self.mapping.get(logical, ())
+
+
+TRAIN_RULES = Rules("train", {
+    "embed": ("data",),            # FSDP rows
+    "embed2": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "inner": ("model",),
+    "experts": ("data",),          # EP shares the FSDP axis
+    "vision": ("data",),
+    "codebooks": (),
+    "batch": ("pod", "data"),
+    "seq": (),
+    "kv_seq": ("model",),
+    "state_heads": ("model",),
+})
+
+SERVE_RULES = Rules("serve", {
+    "embed": ("model",),           # fallback TP when heads/ff can't divide
+    "embed2": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "inner": ("model",),
+    "experts": ("data",),
+    "vision": (),
+    "codebooks": (),
+    "batch": ("pod", "data"),
+    "seq": (),
+    "kv_seq": ("model",),          # sequence-parallel KV cache
+    "state_heads": ("model",),
+})
+
+
+# Lower value = assigned first. Preferred TP dims (heads/ff/vocab/experts)
+# claim mesh axes before the "embed" fallback dims, regardless of the order
+# the dimensions appear in the tensor.
+_PRIORITY = {
+    "batch": 0, "experts": 0,
+    "heads": 1, "kv_heads": 1, "ff": 1, "vocab": 1, "inner": 1,
+    "kv_seq": 1, "state_heads": 1,
+    "embed": 3, "embed2": 3, "vision": 3,
+}
+
+
+def _subsets_by_product(axes: tuple[str, ...], sizes: dict[str, int]):
+    """Non-empty ordered subsets of ``axes``, largest shard-product first."""
+    out = []
+    for r in range(len(axes), 0, -1):
+        for comb in itertools.combinations(axes, r):
+            prod = 1
+            for a in comb:
+                prod *= sizes[a]
+            out.append((prod, comb))
+    out.sort(key=lambda t: -t[0])
+    return [c for _, c in out]
+
+
+def resolve_spec(shape: tuple[int, ...], logical: tuple[str, ...],
+                 rules: Rules, mesh: Mesh) -> P:
+    """PartitionSpec for one tensor, honoring divisibility and axis reuse."""
+    assert len(shape) == len(logical), (shape, logical)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    parts: list = [None] * len(shape)
+    order = sorted(range(len(shape)),
+                   key=lambda i: (_PRIORITY.get(logical[i], 2), i))
+    for i in order:
+        dim, name = shape[i], logical[i]
+        cand = tuple(a for a in rules.axes_for(name)
+                     if a in sizes and a not in used)
+        chosen: tuple[str, ...] = ()
+        for subset in _subsets_by_product(cand, sizes) if cand else []:
+            prod = 1
+            for a in subset:
+                prod *= sizes[a]
+            if prod > 1 and dim % prod == 0:
+                chosen = subset
+                break
+        if chosen:
+            used.update(chosen)
+            parts[i] = chosen if len(chosen) > 1 else chosen[0]
+    if rules.model_fallback and "model" in sizes and "model" not in used:
+        msize = sizes["model"]
+        for i in order:
+            if logical[i] not in ("embed", "embed2"):
+                continue
+            cur = parts[i]
+            cur_axes = (() if cur is None
+                        else (cur if isinstance(cur, tuple) else (cur,)))
+            prod = msize
+            for a in cur_axes:
+                prod *= sizes[a]
+            if prod > 1 and shape[i] % prod == 0:
+                parts[i] = cur_axes + ("model",) if cur_axes else "model"
+                used.add("model")
+                break
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_specs(shape_tree, logical_tree, rules: Rules, mesh: Mesh):
+    """Map (ShapeDtypeStruct tree, logical-axes tree) -> PartitionSpec tree."""
+    def one(sds, axes):
+        if not isinstance(axes, tuple):
+            raise TypeError(f"bad logical axes {axes!r}")
+        return resolve_spec(tuple(sds.shape), axes, rules, mesh)
+
+    return jax.tree.map(one, shape_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_shardings(shape_tree, logical_tree, rules: Rules, mesh: Mesh):
+    specs = tree_specs(shape_tree, logical_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(shape: tuple[int, ...], rules: Rules, mesh: Mesh,
+               seq_axes: tuple[str, ...] = ()) -> P:
+    """Spec for a [batch, seq, ...] input tensor."""
+    logical = ("batch",) + seq_axes + ("",) * (len(shape) - 1 - len(seq_axes))
+    return resolve_spec(shape, logical[: len(shape)], rules, mesh)

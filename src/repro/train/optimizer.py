@@ -1,0 +1,118 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and ZeRO-style
+sharded state (pure JAX — no optax in this environment).
+
+Optimizer moments are f32 and inherit the parameter sharding (with the
+TRAIN_RULES FSDP mapping this is ZeRO-1/3 combined: params, grads, and
+moments are all sharded over the data axis). An optional f32 master copy is
+kept when params are low-precision.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "opt_state_specs", "apply_updates",
+           "lr_at"]
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_f32: bool = True
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def _needs_master(params) -> bool:
+    return any(l.dtype != jnp.float32 for l in jax.tree.leaves(params))
+
+
+def init_opt_state(params, cfg: OptConfig):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    # Master copy only when params are low-precision: for f32 params the
+    # cast would alias the same buffer (and break donation) for zero benefit.
+    if cfg.master_f32 and _needs_master(params):
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def opt_state_specs(param_specs_tree, cfg: OptConfig, has_master: bool = True):
+    """Logical-axis tree for the optimizer state (mirrors the params)."""
+    is_axes = lambda x: isinstance(x, tuple)
+    ident = lambda a: a
+    state = {
+        "m": jax.tree.map(ident, param_specs_tree, is_leaf=is_axes),
+        "v": jax.tree.map(ident, param_specs_tree, is_leaf=is_axes),
+        "step": (),
+    }
+    if cfg.master_f32 and has_master:
+        state["master"] = jax.tree.map(ident, param_specs_tree, is_leaf=is_axes)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(p, pm, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        pm32 = pm.astype(jnp.float32)
+        new_master = pm32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                  + cfg.weight_decay * pm32)
+        return new_master.astype(p.dtype), new_master, m2, v2
+
+    out = jax.tree.map(upd, params, masters, grads, state["m"], state["v"])
+    # Unzip the 4-tuples.
+    is4 = lambda x: isinstance(x, tuple) and len(x) == 4
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is4)
+    new_master = jax.tree.map(lambda t: t[1], out, is_leaf=is4)
+    new_m = jax.tree.map(lambda t: t[2], out, is_leaf=is4)
+    new_v = jax.tree.map(lambda t: t[3], out, is_leaf=is4)
+
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_master
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

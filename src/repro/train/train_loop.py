@@ -1,0 +1,119 @@
+"""Training loop: jitted step with microbatch accumulation, remat, sharded
+state, metrics, checkpoint hooks.
+
+``make_train_step`` builds the jitted (state, batch) -> (state, metrics)
+function with donated state buffers. Gradient accumulation splits the batch
+into ``microbatches`` chunks and folds them with ``lax.scan`` — trace size is
+O(1) in the chunk count, and the MoE dispatch buffers shrink by the same
+factor (the reason the 235B train cell fits; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Runtime
+from .optimizer import OptConfig, apply_updates, init_opt_state
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_train_state",
+           "train_loop"]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    runtime: Runtime = Runtime()
+    log_every: int = 10
+    ckpt_every: int = 50
+
+
+TrainState = dict  # {"params": ..., "opt": ...}
+
+
+def init_train_state(model, key, tc: TrainConfig):
+    params, specs = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, tc.opt)}, specs
+
+
+def _split_batch(batch, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        # Strided split: each microbatch takes every n-th sequence, so under a
+        # batch-sharded layout every microbatch still spans all data shards
+        # evenly (no resharding inside the accumulation scan).
+        return x.reshape((b // n, n) + x.shape[1:]).swapaxes(0, 1)
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model, tc: TrainConfig) -> Callable:
+    """Returns step(state, batch) -> (state, metrics); jit with donation."""
+
+    def loss_fn(params, mb):
+        return model.train_loss(params, mb, tc.runtime)
+
+    def step(state, batch):
+        params = state["params"]
+        if tc.microbatches > 1:
+            mbs = _split_batch(batch, tc.microbatches)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                loss_acc, g_acc = acc
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            (loss_sum, grads), _ = jax.lax.scan(body, (0.0, zero), mbs)
+            loss = loss_sum / tc.microbatches
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        new_params, new_opt, om = apply_updates(params, grads, state["opt"],
+                                                tc.opt)
+        metrics = {"loss": loss.astype(jnp.float32), **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+def train_loop(model, tc: TrainConfig, data, steps: int, *,
+               state=None, start_step: int = 0, checkpointer=None,
+               step_fn=None, callbacks: list[Callable] | None = None,
+               straggler=None):
+    """Host-side loop: data feed, metrics, periodic (async) checkpoints.
+
+    Pure function of (state, start_step, data) -> deterministic restart.
+    ``callbacks`` receive (step, metrics) — used by tests to inject failures.
+    """
+    import time as _time
+
+    if state is None:
+        state, _ = init_train_state(model, jax.random.PRNGKey(0), tc)
+    step_fn = step_fn or jax.jit(make_train_step(model, tc), donate_argnums=0)
+
+    history = []
+    for step in range(start_step, steps):
+        t0 = _time.perf_counter()
+        batch = data.batch_at(step)
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = _time.perf_counter() - t0
+        metrics["step_time_s"] = dt
+        history.append((step, metrics))
+        if straggler is not None:
+            straggler.record(step, dt)
+        for cb in callbacks or []:
+            cb(step, metrics)
+        if checkpointer is not None and (step + 1) % tc.ckpt_every == 0:
+            checkpointer.save_async(step + 1, state)
+    if checkpointer is not None:
+        checkpointer.wait()
+    return state, history

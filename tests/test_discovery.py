@@ -1,0 +1,130 @@
+"""End-to-end discovery + topology report + perf model tests (paper C1, §VI-A)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (Topology, discover_sim, make_h100_like,
+                        make_mi210_like, spec_from_topology, TPU_V5E)
+from repro.core.perfmodel import (AppParams, GpuParams, evaluate,
+                                  gpu_params_from_topology)
+
+KIB, MIB = 1024, 1024**2
+
+
+@pytest.fixture(scope="module")
+def h100_report():
+    topo, timings = discover_sim(make_h100_like(seed=11), n_samples=17)
+    return topo, timings
+
+
+class TestDiscovery:
+    def test_l1_attributes(self, h100_report):
+        topo, _ = h100_report
+        l1 = topo.find_memory("L1")
+        assert l1 is not None
+        assert abs(l1.get("size") - 238 * KIB) <= 2 * KIB
+        assert abs(l1.get("load_latency") - 38.0) < 4.0
+        assert l1.get("line_size") == 128
+        assert l1.get("fetch_granularity") == 32
+        assert l1.get("amount") == 1
+
+    def test_l2_segmentation(self, h100_report):
+        topo, _ = h100_report
+        l2 = topo.find_memory("L2")
+        assert l2 is not None
+        assert l2.get("amount") == 2                      # paper §IV-F.1
+        assert abs(l2.get("segment_size") - 25 * MIB) <= MIB
+        assert l2.get("read_bw") > 0
+
+    def test_unified_l1_sharing(self, h100_report):
+        topo, _ = h100_report
+        l1 = topo.find_memory("L1")
+        assert set(l1.shared_with) >= {"Texture", "Readonly"}
+        const = topo.find_memory("ConstL1")
+        assert "L1" not in const.shared_with
+
+    def test_device_memory(self, h100_report):
+        topo, _ = h100_report
+        dm = topo.find_memory("DeviceMemory")
+        assert abs(dm.get("load_latency") - 843) < 60
+        assert abs(dm.get("read_bw") - 2500) / 2500 < 0.15   # GB/s
+
+    def test_timings_recorded(self, h100_report):
+        _, timings = h100_report
+        assert timings.total > 0
+        assert "size" in timings.per_family and "latency" in timings.per_family
+
+    def test_mi210_cu_sharing(self):
+        topo, _ = discover_sim(make_mi210_like(seed=12), n_samples=17)
+        sl1d = topo.find_memory("sL1d")
+        assert sl1d is not None
+        assert sl1d.get("exclusive_cus")  # disabled partners -> exclusive CUs
+        assert any("," in g for g in sl1d.shared_with)  # some CU pairs share
+
+    def test_provenance_and_confidence(self, h100_report):
+        topo, _ = h100_report
+        l1 = topo.find_memory("L1")
+        assert l1.attrs["size"].provenance == "benchmark"
+        assert l1.attrs["size"].confidence is not None
+
+
+class TestTopologySerialization:
+    def test_json_roundtrip(self, h100_report):
+        topo, _ = h100_report
+        s = topo.dumps()
+        back = Topology.loads(s)
+        assert back.model == topo.model
+        assert {m.name for m in back.memory} == {m.name for m in topo.memory}
+        l1a, l1b = topo.find_memory("L1"), back.find_memory("L1")
+        assert l1a.get("size") == l1b.get("size")
+        assert l1b.attrs["size"].confidence == pytest.approx(
+            l1a.attrs["size"].confidence, rel=1e-3)
+
+    def test_json_is_valid(self, h100_report):
+        topo, _ = h100_report
+        parsed = json.loads(topo.dumps())
+        assert parsed["vendor"] == "NVIDIA"
+
+    def test_markdown_report(self, h100_report):
+        topo, _ = h100_report
+        md = topo.to_markdown()
+        assert "| L1 |" in md and "## Memory" in md
+
+    def test_spec_overlay(self, h100_report):
+        topo, _ = h100_report
+        spec = spec_from_topology(topo, TPU_V5E)
+        assert spec.hbm_bandwidth != TPU_V5E.hbm_bandwidth  # overridden
+        assert spec.peak_bf16_flops == TPU_V5E.peak_bf16_flops
+
+
+class TestPerfModel:
+    def test_memory_bound_detection(self):
+        gpu = GpuParams(mem_latency=400, mem_bandwidth=800e9, mem_freq=1e9,
+                        departure_delay=100)
+        app = AppParams(comp_cycles=10, mem_cycles=4000, loads_per_warp=32,
+                        active_warps_per_sm=32)
+        res = evaluate(app, gpu)
+        assert res.memory_bound
+        assert res.cwp == 32  # capped at active warps
+
+    def test_compute_bound_detection(self):
+        gpu = GpuParams(mem_latency=40, mem_bandwidth=3e12, mem_freq=1e9,
+                        departure_delay=1)
+        app = AppParams(comp_cycles=10000, mem_cycles=40, loads_per_warp=1,
+                        active_warps_per_sm=8)
+        res = evaluate(app, gpu)
+        assert not res.memory_bound
+
+    def test_mwp_capped_by_warps(self):
+        gpu = GpuParams(mem_latency=1000, mem_bandwidth=1e15, mem_freq=1e9,
+                        departure_delay=0.1)
+        app = AppParams(comp_cycles=100, mem_cycles=100, loads_per_warp=1,
+                        active_warps_per_sm=4)
+        assert evaluate(app, gpu).mwp <= 4
+
+    def test_params_from_topology(self, h100_report):
+        topo, _ = h100_report
+        gpu = gpu_params_from_topology(topo)
+        assert gpu.mem_latency > 500      # discovered DRAM latency
+        assert gpu.mem_bandwidth > 1e12   # discovered bandwidth

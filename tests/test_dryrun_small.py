@@ -1,0 +1,113 @@
+"""In-CI dry-run: subprocess with 8 forced host devices, (2,4) mesh.
+
+The full 512-device x 40-cell run lives in artifacts/dryrun (see
+EXPERIMENTS.md §Dry-run); this test keeps the machinery honest in CI using
+one cell per step kind, plus the HLO collective parser and roofline math on
+the produced artifacts.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cells(cells, mesh_shape=(2, 4)):
+    code = textwrap.dedent(f"""
+        import os, sys, json
+        os.environ["REPRO_DRYRUN_DEVICES"] = "8"
+        sys.path.insert(0, {os.path.join(ROOT, 'src')!r})
+        from repro.launch import dryrun
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh({mesh_shape!r}, ("data", "model"))
+        out = []
+        for arch, shape in {cells!r}:
+            out.append(dryrun.run_cell(arch, shape, mesh, "ci"))
+        print("===JSON===")
+        print(json.dumps(out))
+    """)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    payload = proc.stdout.split("===JSON===")[1]
+    return json.loads(payload)
+
+
+@pytest.fixture(scope="module")
+def ci_cells():
+    return _run_cells([
+        ("internlm2-1.8b", "train_4k"),
+        ("internlm2-1.8b", "decode_32k"),
+        ("rwkv6-3b", "long_500k"),
+    ])
+
+
+def test_all_ci_cells_compile(ci_cells):
+    for rec in ci_cells:
+        assert rec["ok"], f"{rec['arch']}/{rec['shape']}: {rec.get('error')}"
+
+
+def test_cost_and_memory_recorded(ci_cells):
+    for rec in ci_cells:
+        assert rec["cost"].get("flops", 0) > 0
+        assert rec["memory"]["argument_bytes"] > 0
+
+
+def test_train_cell_has_collectives(ci_cells):
+    train = next(r for r in ci_cells if r["shape"] == "train_4k")
+    assert train["collectives"]["total_bytes"] > 0
+    assert "all-reduce" in train["collectives"]["bytes_by_op"]
+
+
+def test_roofline_terms_from_ci_cells(ci_cells):
+    from repro.analysis.roofline import roofline_from_cell
+    from repro.configs import get_config, shape_for
+    from repro.core.catalog import TPU_V5E
+
+    train = next(r for r in ci_cells if r["shape"] == "train_4k")
+    terms = roofline_from_cell(train, get_config("internlm2-1.8b"),
+                               shape_for("train_4k"), TPU_V5E, chips=8)
+    assert terms.compute_s > 0 and terms.memory_s > 0
+    assert terms.bound in ("compute", "memory", "collective")
+    assert 0 < terms.roofline_fraction <= 1.0
+    assert terms.useful_ratio > 0.1, "HLO flops wildly above model flops"
+
+
+def test_long500k_rwkv_state_bound(ci_cells):
+    long = next(r for r in ci_cells if r["shape"] == "long_500k")
+    assert long["ok"]
+    # attention-free decode: the cache is O(1); arguments stay modest.
+    assert long["memory"]["argument_bytes"] < 20e9
+
+
+class TestHloParser:
+    def test_parse_canned_hlo(self):
+        from repro.analysis.hlo import parse_collectives
+        hlo = """
+          %ag = f32[256,128]{1,0} all-gather(%x), replica_groups=...
+          %ar = bf16[1024]{0} all-reduce(%y), to_apply=%add
+          %arს = (f32[8]{0}, f32[16]{0}) all-reduce-start(%a, %b)
+          %ard = (f32[8]{0}, f32[16]{0}) all-reduce-done(%ars)
+          %cp = u32[64]{0} collective-permute(%z)
+          %nothing = f32[2]{0} add(%p, %q)
+        """
+        st = parse_collectives(hlo)
+        assert st.bytes_by_op["all-gather"] == 256 * 128 * 4
+        assert st.bytes_by_op["all-reduce"] == 1024 * 2 + (8 + 16) * 4
+        assert st.bytes_by_op["collective-permute"] == 64 * 4
+        assert st.count_by_op["all-reduce"] == 2    # start counted, done not
+
+    def test_full_artifacts_if_present(self):
+        """If the 512-device artifacts exist, they must all be ok."""
+        art = os.path.join(ROOT, "artifacts", "dryrun")
+        if not os.path.isdir(art):
+            pytest.skip("full dry-run artifacts not generated yet")
+        import glob
+        recs = [json.load(open(f)) for f in glob.glob(art + "/*/*.json")]
+        assert len(recs) >= 80
+        bad = [r for r in recs if not r.get("ok")]
+        assert not bad, [(r["arch"], r["shape"], r.get("error")) for r in bad]

@@ -1,0 +1,55 @@
+"""Live-hardware sanity checks: real measurements on this container's CPU.
+
+These mirror the paper's §V 'universality' runs at miniature scale. They are
+tolerant by design — CI machines have noisy caches — but they do assert the
+physically necessary ordering (DRAM slower than cache, bandwidth positive).
+"""
+import numpy as np
+import pytest
+
+from repro.core.probes import HostRunner, measure_collective
+from repro.core.probes.bandwidth import (all_to_all_time, ring_all_gather_time,
+                                         ring_all_reduce_time)
+
+MIB = 1024**2
+
+
+@pytest.fixture(scope="module")
+def runner():
+    return HostRunner(max_bytes=64 * MIB, iters=1 << 13)
+
+
+class TestHostPChase:
+    def test_small_vs_large_latency_ordering(self, runner):
+        small = runner.pchase("host-cache", 16 * 1024, 64, 5)   # fits L1/L2
+        large = runner.pchase("host-cache", 64 * MIB, 64, 5)    # DRAM-bound
+        # Median chase step over 64 MiB must be slower than over 16 KiB.
+        assert np.median(large) > np.median(small) * 1.3
+
+    def test_samples_positive_and_finite(self, runner):
+        lats = runner.pchase("host-cache", 1 * MIB, 64, 7)
+        assert lats.shape == (7,)
+        assert np.all(np.isfinite(lats)) and np.all(lats > 0)
+
+    def test_bandwidth_positive(self, runner):
+        bw = runner.bandwidth("DRAM", "read", nbytes=32 * MIB, repeats=2)
+        assert bw > 1e8  # >0.1 GB/s — any real machine clears this
+
+
+class TestCollectiveModels:
+    def test_ring_all_reduce_formula(self):
+        # 2(n-1)/n * bytes / bw
+        assert ring_all_reduce_time(100e6, 4, 50e9) == pytest.approx(
+            2 * 3 / 4 * 100e6 / 50e9)
+        assert ring_all_reduce_time(100e6, 1, 50e9) == 0.0
+
+    def test_all_gather_and_a2a(self):
+        assert ring_all_gather_time(1e6, 8, 50e9) == pytest.approx(7e6 / 50e9)
+        assert all_to_all_time(8e6, 8, 50e9) == pytest.approx(7e6 / 50e9)
+
+    def test_measure_collective_fallback(self):
+        # Single-device container -> analytic path with documented provenance.
+        est = measure_collective("all_reduce", 64 * MIB, 16, 50e9)
+        expect = ring_all_reduce_time(64 * MIB, 16, 50e9)
+        assert est.seconds == pytest.approx(expect)
+        assert est.effective_bw > 0

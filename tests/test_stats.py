@@ -1,0 +1,209 @@
+"""Tests for the K-S / reduction / CPD / outlier machinery (paper C3)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stats import (
+    boundary_suspect,
+    cusum_change_point,
+    detect_outliers,
+    geometric_reduction,
+    ks_2samp,
+    ks_change_point,
+    ks_critical_value,
+    ks_pvalue,
+    ks_statistic,
+    pelt_segments,
+    reduce_rows,
+    winsorize,
+)
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------- K-S test
+class TestKS:
+    def test_identical_samples_d_zero(self):
+        a = np.arange(100.0)
+        assert ks_statistic(a, a) == 0.0
+
+    def test_disjoint_samples_d_one(self):
+        a = np.zeros(50)
+        b = np.ones(50)
+        assert ks_statistic(a, b) == 1.0
+
+    def test_known_value_small(self):
+        # Hand-computed: a={1,2,3}, b={2,3,4}: max ECDF gap = 1/3 at x in [1,2).
+        d = ks_statistic(np.array([1.0, 2, 3]), np.array([2.0, 3, 4]))
+        assert math.isclose(d, 1.0 / 3.0, rel_tol=1e-12)
+
+    def test_critical_value_formula(self):
+        # eq. (1): alpha=0.05, n=m=100 -> sqrt(-0.5*(200/10000)*ln(0.025))
+        expected = math.sqrt(-0.5 * (200 / 10000) * math.log(0.025))
+        assert math.isclose(ks_critical_value(100, 100, 0.05), expected, rel_tol=1e-12)
+
+    def test_critical_value_monotone_in_alpha(self):
+        assert ks_critical_value(50, 50, 0.01) > ks_critical_value(50, 50, 0.10)
+
+    def test_same_distribution_rarely_rejects(self):
+        rejects = 0
+        for i in range(50):
+            rng = np.random.default_rng(i)
+            a, b = rng.normal(size=200), rng.normal(size=200)
+            rejects += ks_2samp(a, b, alpha=0.01).reject
+        assert rejects <= 3  # ~alpha level
+
+    def test_shifted_distribution_rejects(self):
+        a = RNG.normal(0.0, 1.0, size=300)
+        b = RNG.normal(2.5, 1.0, size=300)
+        res = ks_2samp(a, b, alpha=0.01)
+        assert res.reject and res.pvalue < 1e-6 and res.confidence > 0
+
+    def test_pvalue_bounds(self):
+        assert ks_pvalue(0.0, 10, 10) == 1.0
+        assert ks_pvalue(1.0, 100, 100) < 1e-10
+
+    @given(
+        st.lists(st.floats(-1e6, 1e6), min_size=2, max_size=200),
+        st.lists(st.floats(-1e6, 1e6), min_size=2, max_size=200),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_property_d_in_unit_interval_and_symmetric(self, xs, ys):
+        a, b = np.array(xs), np.array(ys)
+        d = ks_statistic(a, b)
+        assert 0.0 <= d <= 1.0
+        assert math.isclose(d, ks_statistic(b, a), abs_tol=1e-12)
+
+    @given(st.lists(st.floats(-1e3, 1e3), min_size=5, max_size=100))
+    @settings(max_examples=40, deadline=None)
+    def test_property_self_test_never_rejects(self, xs):
+        a = np.array(xs)
+        assert not ks_2samp(a, a, alpha=0.001).reject
+
+
+# ------------------------------------------------------------- reduction
+class TestReduction:
+    def test_matches_eq2(self):
+        r = np.array([[1.0, 2.0], [3.0, 5.0]])
+        gmin = 1.0
+        expect0 = math.sqrt((1 - gmin) ** 2 + (2 - gmin) ** 2)
+        expect1 = math.sqrt((3 - gmin) ** 2 + (5 - gmin) ** 2)
+        out = geometric_reduction(r)
+        assert np.allclose(out, [expect0, expect1])
+
+    def test_constant_rows_reduce_to_scaled_offset(self):
+        r = np.full((4, 16), 7.0)
+        out = geometric_reduction(r)
+        assert np.allclose(out, 0.0)  # min == all values
+
+    def test_amplifies_regime_change(self):
+        low = RNG.normal(10, 0.5, size=(8, 64))
+        high = RNG.normal(100, 5.0, size=(8, 64))
+        s = geometric_reduction(np.vstack([low, high]))
+        assert s[8:].min() > s[:8].max() * 2
+
+    def test_ragged_rows(self):
+        rows = [np.array([1.0, 1.0]), np.array([5.0, 5.0, 5.0, 5.0])]
+        out = reduce_rows(rows)
+        assert out.shape == (2,) and out[1] > out[0]
+
+    @given(st.integers(2, 20), st.integers(2, 40))
+    @settings(max_examples=25, deadline=None)
+    def test_property_nonnegative(self, nrow, ncol):
+        rng = np.random.default_rng(nrow * 41 + ncol)
+        out = geometric_reduction(rng.normal(size=(nrow, ncol)))
+        assert np.all(out >= 0.0)
+
+
+# ------------------------------------------------------------------- CPD
+class TestKSChangePoint:
+    def _step_series(self, n_left, n_right, lo, hi, noise, seed=0):
+        rng = np.random.default_rng(seed)
+        return np.concatenate([
+            rng.normal(lo, noise, n_left),
+            rng.normal(hi, noise, n_right),
+        ])
+
+    def test_clean_step_found_exactly(self):
+        s = self._step_series(40, 40, 10.0, 100.0, 0.5)
+        cp = ks_change_point(s, alpha=0.01)
+        assert cp.found and abs(cp.index - 40) <= 1
+
+    def test_no_change_not_found(self):
+        s = RNG.normal(50.0, 1.0, size=80)
+        cp = ks_change_point(s, alpha=0.001)
+        assert not cp.found and cp.index == -1
+
+    def test_outlier_robustness(self):
+        # The paper's motivation for K-S: a lone spike must not become a CP.
+        s = RNG.normal(50.0, 1.0, size=100)
+        s[30] = 5000.0
+        cp = ks_change_point(s, alpha=0.001)
+        assert not cp.found
+
+    def test_step_with_outliers_still_found(self):
+        s = self._step_series(50, 50, 10.0, 100.0, 1.0, seed=3)
+        s[10] = 900.0
+        s[80] = 0.0
+        cp = ks_change_point(s, alpha=0.01)
+        assert cp.found and abs(cp.index - 50) <= 2
+
+    def test_first_mode(self):
+        s = self._step_series(30, 30, 0.0, 10.0, 0.1)
+        cp = ks_change_point(s, alpha=0.01, mode="first")
+        assert cp.found and cp.index <= 31
+
+    @given(
+        st.integers(10, 60), st.integers(10, 60),
+        st.floats(1.0, 50.0), st.integers(0, 10_000),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_property_big_steps_always_found(self, nl, nr, noise, seed):
+        rng = np.random.default_rng(seed)
+        gap = noise * 50.0  # enormous separation
+        s = np.concatenate([
+            rng.normal(0.0, noise, nl), rng.normal(gap, noise, nr)])
+        cp = ks_change_point(s, alpha=0.01)
+        assert cp.found and abs(cp.index - nl) <= 3
+
+
+class TestCUSUMAndPELT:
+    def test_cusum_step(self):
+        s = np.concatenate([np.full(50, 1.0), np.full(50, 9.0)])
+        s += RNG.normal(0, 0.1, size=100)
+        cp = cusum_change_point(s)
+        assert cp.found and abs(cp.index - 50) <= 2
+
+    def test_pelt_two_changes(self):
+        rng = np.random.default_rng(7)
+        s = np.concatenate([
+            rng.normal(0, 0.3, 40), rng.normal(8, 0.3, 40), rng.normal(-4, 0.3, 40)])
+        cps = pelt_segments(s)
+        assert len(cps) == 2
+        assert abs(cps[0] - 40) <= 2 and abs(cps[1] - 80) <= 2
+
+    def test_pelt_no_change(self):
+        s = RNG.normal(3.0, 0.5, size=100)
+        assert pelt_segments(s) == []
+
+
+class TestOutliers:
+    def test_detect_spike(self):
+        s = np.concatenate([RNG.normal(10, 0.5, 50), [500.0]])
+        rep = detect_outliers(s)
+        assert rep.any and 50 in rep.indices
+
+    def test_boundary_suspect(self):
+        s = RNG.normal(10, 0.5, 60)
+        s[-1] = 999.0
+        assert boundary_suspect(s)
+        s2 = RNG.normal(10, 0.5, 60)
+        s2[30] = 999.0
+        assert not boundary_suspect(s2)
+
+    def test_winsorize_clamps(self):
+        s = np.concatenate([RNG.normal(0, 1, 98), [1e9, -1e9]])
+        w = winsorize(s, pct=2.0)
+        assert w.max() < 1e6 and w.min() > -1e6
