@@ -1,0 +1,26 @@
+# Repo tooling: tier-1 verification, the sub-minute fast lane, benchmarks.
+#
+#   make test       — the full tier-1 suite (what CI and ROADMAP.md reference)
+#   make test-fast  — deselects @slow tests (subprocess drivers, full
+#                     dry-runs); sub-minute signal while iterating
+#   make test-engine— just the probe-engine + probe/stat layers
+#   make bench      — the benchmark harness (paper tables + engine_speedup)
+
+PY      ?= python
+PYTEST  ?= $(PY) -m pytest
+ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-fast test-engine bench
+
+test:
+	$(ENV) $(PYTEST) -x -q
+
+test-fast:
+	$(ENV) $(PYTEST) -q -m "not slow"
+
+test-engine:
+	$(ENV) $(PYTEST) -q tests/test_engine.py tests/test_probes.py \
+		tests/test_stats.py tests/test_discovery.py
+
+bench:
+	$(ENV) $(PY) benchmarks/run.py

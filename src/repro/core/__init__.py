@@ -7,12 +7,13 @@ from .catalog import CATALOG, HOST_CPU, TPU_V4, TPU_V5E, HardwareSpec, get_spec
 from .simulate import (SIM_DEVICES, SimDevice, SimLevel, make_h100_like,
                        make_mi210_like, make_v5e_like)
 from .discover import (DiscoveryTimings, discover_host, discover_sim,
-                       spec_from_topology)
+                       discover_sim_legacy, spec_from_topology)
 
 __all__ = [
     "Attribute", "ComputeElement", "Link", "MemoryElement", "Topology",
     "CATALOG", "HOST_CPU", "TPU_V4", "TPU_V5E", "HardwareSpec", "get_spec",
     "SIM_DEVICES", "SimDevice", "SimLevel", "make_h100_like",
     "make_mi210_like", "make_v5e_like",
-    "DiscoveryTimings", "discover_host", "discover_sim", "spec_from_topology",
+    "DiscoveryTimings", "discover_host", "discover_sim",
+    "discover_sim_legacy", "spec_from_topology",
 ]

@@ -5,6 +5,21 @@ the statistics layer, and assembles a ``Topology`` report with provenance and
 confidence annotations. Mirrors the MT4G CLI behavior: the whole suite by
 default, an optional restriction to specific memory elements, and timing of
 each benchmark family (paper §V-A reports per-family run times).
+
+Two execution paths produce identical topologies:
+
+* the **probe engine** (default): the declarative registry in
+  ``core.engine`` expands into (space × family) work items that a
+  dependency-aware scheduler runs concurrently, with request-keyed sample
+  caching, batched p-chase sweeps, and vectorized K-S statistics;
+* the **legacy sequential loop** (``engine=False`` /
+  ``discover_sim_legacy``): one probe at a time, exactly as the paper's tool
+  runs them — kept as the reference implementation and as the baseline of
+  the ``engine_speedup`` benchmark.
+
+Identity holds because simulated runners key every sample stream by the
+request itself (``simulate._KeyedSampler``): scheduling, batching, and
+caching change when samples are drawn, never what is drawn.
 """
 from __future__ import annotations
 
@@ -21,7 +36,8 @@ from .probes.size import find_size
 from .topology import (PROVENANCE_API, PROVENANCE_BENCHMARK, ComputeElement,
                        MemoryElement, Topology)
 
-__all__ = ["DiscoveryTimings", "discover_sim", "discover_host", "spec_from_topology"]
+__all__ = ["DiscoveryTimings", "discover_sim", "discover_sim_legacy",
+           "discover_host", "spec_from_topology"]
 
 KIB = 1024
 
@@ -51,9 +67,142 @@ class _Timer:
         return False
 
 
+# --------------------------------------------------------------------------
+# Engine-based discovery (default path)
+# --------------------------------------------------------------------------
 def discover_sim(device, n_samples: int = 33,
-                 elements: list[str] | None = None) -> tuple[Topology, DiscoveryTimings]:
-    """Full MT4G-style discovery of a simulated device."""
+                 elements: list[str] | None = None, *,
+                 engine: bool = True, max_workers: int | None = None,
+                 ) -> tuple[Topology, DiscoveryTimings]:
+    """Full MT4G-style discovery of a simulated device.
+
+    ``engine=True`` (default) routes through the batched probe engine;
+    ``engine=False`` runs the legacy sequential loop.  Both produce the same
+    topology for a fixed device seed.
+    """
+    if not engine:
+        return discover_sim_legacy(device, n_samples, elements)
+
+    from .engine import run_probes
+
+    runner = SimRunner(device)
+    timings = DiscoveryTimings()
+
+    device_families = ["sharing", "device_memory_latency",
+                       "device_memory_bandwidth"]
+    if device.cu_share_groups and (not elements or "sL1d" in elements):
+        device_families.insert(1, "cu_sharing")
+
+    eng = run_probes(runner, n_samples=n_samples, elements=elements,
+                     device_families=tuple(device_families),
+                     max_workers=max_workers, timings=timings)
+
+    topo = Topology(vendor=device.vendor, model=device.name,
+                    backend=f"simulated:{device.name}")
+    topo.set_general("clock_domain", "cycles", provenance=PROVENANCE_API)
+    topo.compute.append(ComputeElement("cores_per_sm", device.cores_per_sm))
+
+    # ---- per-space assembly, in probe order (mirrors the legacy loop)
+    for info in eng.infos:
+        lvl = device.level(info.name)
+        res = eng.space_results[info.name]
+        me = MemoryElement(info.name, info.kind, info.scope)
+
+        sr = res["size"]
+        if sr.found:
+            if info.scope == "chip":
+                # Paper Table I: L2-style totals come from the API; the
+                # benchmark contributes the per-core segment size (§IV-F.1).
+                me.set("size", lvl.size, "B", PROVENANCE_API)
+            else:
+                me.set("size", sr.size, "B", PROVENANCE_BENCHMARK,
+                       sr.confidence)
+                if not sr.cusum_agrees:
+                    topo.notes.append(
+                        f"{info.name}: CUSUM cross-check disagrees with the "
+                        f"K-S change point — size result is suspect")
+
+        gr = res.get("fetch_granularity")
+        if gr is not None and gr.found:
+            me.set("fetch_granularity", gr.granularity, "B",
+                   PROVENANCE_BENCHMARK, 1.0)
+
+        lat = res["latency"]
+        me.set("load_latency", round(lat.p50, 1), "cyc", PROVENANCE_BENCHMARK)
+        me.set("load_latency_mean", round(lat.mean, 1), "cyc",
+               PROVENANCE_BENCHMARK)
+        me.set("load_latency_p95", round(lat.p95, 1), "cyc",
+               PROVENANCE_BENCHMARK)
+
+        ls = res.get("line_size")
+        if ls is not None and ls.found:
+            me.set("line_size", ls.line_size, "B", PROVENANCE_BENCHMARK, 1.0)
+
+        am = res.get("amount")
+        if am is not None:
+            kind, payload = am
+            if kind == "per_core" and payload.found:
+                me.set("amount", payload.amount, "", PROVENANCE_BENCHMARK, 1.0)
+            elif kind == "aligned":
+                # L2-style: align measured segment to the API-reported total.
+                with _Timer(timings, "amount"):
+                    k, aligned, conf = align_segments(lvl.size, payload)
+                me.set("amount", k, "", PROVENANCE_BENCHMARK, conf)
+                me.set("segment_size", aligned, "B", PROVENANCE_BENCHMARK,
+                       conf)
+
+        bw = res.get("bandwidth")
+        if bw is not None:
+            me.set("read_bw", round(bw.read_bw / 1e9, 1), "GB/s",
+                   PROVENANCE_BENCHMARK)
+            me.set("write_bw", round(bw.write_bw / 1e9, 1), "GB/s",
+                   PROVENANCE_BENCHMARK)
+        topo.memory.append(me)
+
+    # ---- physical sharing between logical spaces (NVIDIA-style, §IV-G)
+    for share in eng.device_results.get("sharing", []):
+        if not share.shared:
+            continue
+        ma = topo.find_memory(share.space_a)
+        mb = topo.find_memory(share.space_b)
+        if mb and mb.name not in ma.shared_with:
+            ma.shared_with.append(mb.name)
+        if ma and ma.name not in mb.shared_with:
+            mb.shared_with.append(ma.name)
+
+    # ---- AMD-style CU<->sL1d sharing (§IV-H)
+    cus = eng.device_results.get("cu_sharing")
+    if cus is not None:
+        sl1d = topo.find_memory("sL1d")
+        sl1d.shared_with = [",".join(map(str, g)) for g in cus.groups
+                            if len(g) > 1]
+        sl1d.set("exclusive_cus", cus.exclusive, "", PROVENANCE_BENCHMARK)
+
+    # ---- device memory
+    dm = MemoryElement("DeviceMemory", "memory", "chip")
+    lat = eng.device_results["device_memory_latency"]
+    dm.set("load_latency", round(lat.p50, 1), "cyc", PROVENANCE_BENCHMARK)
+    bw = eng.device_results["device_memory_bandwidth"]
+    dm.set("read_bw", round(bw.read_bw / 1e9, 1), "GB/s", PROVENANCE_BENCHMARK)
+    dm.set("write_bw", round(bw.write_bw / 1e9, 1), "GB/s",
+           PROVENANCE_BENCHMARK)
+    topo.memory.append(dm)
+
+    topo.notes.append(
+        f"discovery wall time: {eng.wall_seconds:.2f}s (engine; "
+        f"per-family cpu { {k: round(v, 2) for k, v in timings.per_family.items()} }; "
+        f"cache {eng.cache_stats['hits']} hits / "
+        f"{eng.cache_stats['misses']} misses)")
+    return topo, timings
+
+
+# --------------------------------------------------------------------------
+# Legacy sequential discovery (reference implementation + benchmark baseline)
+# --------------------------------------------------------------------------
+def discover_sim_legacy(device, n_samples: int = 33,
+                        elements: list[str] | None = None
+                        ) -> tuple[Topology, DiscoveryTimings]:
+    """The paper-faithful sequential loop: one probe family at a time."""
     runner = SimRunner(device)
     topo = Topology(vendor=device.vendor, model=device.name,
                     backend=f"simulated:{device.name}")
@@ -200,34 +349,58 @@ def discover_sim(device, n_samples: int = 33,
 
 def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
                   quick: bool = True) -> tuple[Topology, DiscoveryTimings]:
-    """Live discovery of this machine's CPU hierarchy (real measurements)."""
-    runner = HostRunner(max_bytes=max_bytes, iters=1 << 14 if quick else 1 << 16)
+    """Live discovery of this machine's CPU hierarchy (real measurements).
+
+    A thin driver over the engine scheduler: the host hierarchy has one
+    probeable space, so the work-item DAG is small (size ∥ latencies ∥
+    bandwidths, all independent on real hardware) — but it shares the same
+    scheduling, caching, and timing machinery as the simulated path.
+    """
+    from .engine import WorkItem, run_work_items
+    from .engine.cache import CachingRunner
+
+    runner = CachingRunner(
+        HostRunner(max_bytes=max_bytes, iters=1 << 14 if quick else 1 << 16))
     topo = Topology(vendor="host", model="cpu", backend="cpu")
     timings = DiscoveryTimings()
 
+    items = [
+        WorkItem(key="size", family="size", fn=lambda _r: find_size(
+            runner, "host-cache", lo=8 * KIB, step=4 * KIB,
+            n_samples=n_samples, max_bytes=max_bytes, max_points=24,
+            max_widenings=1, batched=True)),
+        WorkItem(key="lat_small", family="latency", fn=lambda _r:
+                 measure_latency(runner, "host-cache", fetch_granularity=64,
+                                 n_samples=n_samples, array_factor=256)),
+        WorkItem(key="lat_big", family="latency", fn=lambda _r:
+                 measure_latency(runner, "host-cache", fetch_granularity=4096,
+                                 n_samples=n_samples,
+                                 array_factor=max_bytes // 4096 // 2)),
+        WorkItem(key="bw_read", family="bandwidth",
+                 fn=lambda _r: runner.bandwidth("DRAM", "read")),
+        WorkItem(key="bw_write", family="bandwidth",
+                 fn=lambda _r: runner.bandwidth("DRAM", "write")),
+    ]
+    # Real measurements are perturbed by co-running probes: keep the host
+    # schedule serial (max_workers=1) so timings stay trustworthy — the
+    # engine's value here is the shared orchestration, not parallelism.
+    sched = run_work_items(items, max_workers=1, timings=timings)
+
     me = MemoryElement("host-cache", "cache", "host")
-    with _Timer(timings, "size"):
-        sr = find_size(runner, "host-cache", lo=8 * KIB, step=4 * KIB,
-                       n_samples=n_samples, max_bytes=max_bytes, max_points=24,
-                       max_widenings=1)
+    sr = sched.results["size"]
     if sr.found:
         me.set("size", sr.size, "B", PROVENANCE_BENCHMARK, sr.confidence)
-    with _Timer(timings, "latency"):
-        lat_small = measure_latency(runner, "host-cache", fetch_granularity=64,
-                                    n_samples=n_samples, array_factor=256)
-        lat_big = measure_latency(runner, "host-cache", fetch_granularity=4096,
-                                  n_samples=n_samples,
-                                  array_factor=max_bytes // 4096 // 2)
-    me.set("load_latency", round(lat_small.mean, 2), "ns", PROVENANCE_BENCHMARK)
+    me.set("load_latency", round(sched.results["lat_small"].mean, 2), "ns",
+           PROVENANCE_BENCHMARK)
     topo.memory.append(me)
 
     dram = MemoryElement("DRAM", "memory", "host")
-    dram.set("load_latency", round(lat_big.mean, 2), "ns", PROVENANCE_BENCHMARK)
-    with _Timer(timings, "bandwidth"):
-        dram.set("read_bw", round(runner.bandwidth("DRAM", "read") / 1e9, 2),
-                 "GB/s", PROVENANCE_BENCHMARK)
-        dram.set("write_bw", round(runner.bandwidth("DRAM", "write") / 1e9, 2),
-                 "GB/s", PROVENANCE_BENCHMARK)
+    dram.set("load_latency", round(sched.results["lat_big"].mean, 2), "ns",
+             PROVENANCE_BENCHMARK)
+    dram.set("read_bw", round(sched.results["bw_read"] / 1e9, 2), "GB/s",
+             PROVENANCE_BENCHMARK)
+    dram.set("write_bw", round(sched.results["bw_write"] / 1e9, 2), "GB/s",
+             PROVENANCE_BENCHMARK)
     topo.memory.append(dram)
     topo.notes.append("host runner: per-sample = mean ns/load of a jitted "
                       "dependent chase (DESIGN.md adaptation note 1)")

@@ -1,0 +1,107 @@
+"""The probe engine: registry × spaces -> scheduled, cached, batched probes.
+
+``run_probes`` is the engine entry point: it wraps a ``ProbeRunner`` in the
+keyed sample cache, expands the probe registry into (space × family) work
+items with their dependency edges, runs them on the concurrent scheduler,
+and returns the raw probe results plus per-family timings and cache/order
+diagnostics.  ``discover.discover_sim``/``discover_host`` are thin drivers
+over this function: they assemble the returned results into a ``Topology``
+in exactly the order the legacy sequential loop did.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .cache import CachingRunner, SampleCache
+from .registry import (DEVICE_FAMILIES, ProbeContext, space_probe_specs)
+from .scheduler import WorkItem, run_work_items
+
+__all__ = ["EngineResult", "run_probes", "DEVICE_KEY"]
+
+DEVICE_KEY = "<device>"
+
+
+@dataclass
+class EngineResult:
+    """Raw engine output, pre-topology-assembly."""
+
+    space_results: dict = field(default_factory=dict)  # space -> family -> res
+    device_results: dict = field(default_factory=dict)  # family -> result
+    infos: list = field(default_factory=list)           # probed spaces, in order
+    order: list = field(default_factory=list)           # completion order
+    cache_stats: dict = field(default_factory=dict)
+    wall_seconds: float = 0.0
+
+
+def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
+               *, device_families: tuple[str, ...] = (),
+               max_workers: int | None = None, timings=None,
+               cache: SampleCache | None = None) -> EngineResult:
+    """Run the full registry against ``runner`` through the engine.
+
+    ``device_families`` selects which device-scoped families to schedule
+    (drivers gate e.g. ``cu_sharing`` on the device actually having CU
+    groups, mirroring the legacy flow).
+    """
+    cached = CachingRunner(runner, cache=cache)
+    infos = [i for i in cached.spaces()
+             if not elements or i.name in elements]
+
+    space_results: dict[str, dict] = {i.name: {} for i in infos}
+    shared_ctx = ProbeContext(runner=cached, n_samples=n_samples,
+                              all_results=space_results, infos=infos)
+
+    items: list[WorkItem] = []
+    scheduled: set[tuple[str, str]] = set()
+
+    def make_space_item(info, spec, deps):
+        ctx = ProbeContext(runner=cached, n_samples=n_samples, info=info,
+                           results=space_results[info.name],
+                           all_results=space_results, infos=infos)
+
+        def fn(_results, spec=spec, ctx=ctx, name=info.name):
+            value = spec.run(ctx)
+            space_results[name][spec.family] = value
+            return value
+        return WorkItem(key=(info.name, spec.family), fn=fn, deps=deps,
+                        family=spec.family)
+
+    for info in infos:
+        specs = space_probe_specs(info)
+        families = {s.family for s in specs}
+        for spec in specs:
+            deps = tuple((info.name, d) for d in spec.depends
+                         if d in families)
+            items.append(make_space_item(info, spec, deps))
+            scheduled.add((info.name, spec.family))
+
+    # Device-scoped families: depend on every size result they might read.
+    size_deps = tuple(k for k in scheduled if k[1] == "size")
+    for spec in DEVICE_FAMILIES:
+        if spec.family not in device_families:
+            continue
+        deps = size_deps if spec.family in ("sharing", "cu_sharing") else ()
+
+        def fn(_results, spec=spec):
+            return spec.run(shared_ctx)
+        # Timing buckets match the legacy names (device-memory latency and
+        # bandwidth fold into the per-family "latency"/"bandwidth" rows).
+        bucket = {"device_memory_latency": "latency",
+                  "device_memory_bandwidth": "bandwidth"}.get(spec.family,
+                                                              spec.family)
+        items.append(WorkItem(key=(DEVICE_KEY, spec.family), fn=fn,
+                              deps=deps, family=bucket))
+
+    sched = run_work_items(items, max_workers=max_workers, timings=timings)
+
+    device_results = {fam: sched.results[(DEVICE_KEY, fam)]
+                      for fam in device_families
+                      if (DEVICE_KEY, fam) in sched.results}
+    return EngineResult(
+        space_results=space_results,
+        device_results=device_results,
+        infos=infos,
+        order=sched.order,
+        cache_stats=cached.cache.stats(),
+        wall_seconds=sched.wall_seconds,
+    )

@@ -1,0 +1,201 @@
+"""Declarative probe registry: one spec per benchmark family (paper §IV).
+
+Each family — size, fetch granularity, latency, line size, amount, sharing,
+bandwidth — is registered with its dependencies on other families'
+results, e.g. the line-size probe needs the discovered capacity *and* the
+cold-pass fetch granularity.  The engine turns the registry into
+(space × family) work items for the scheduler; the run functions hold the
+probing policy that used to be inlined in ``discover.discover_sim``
+(parameter choices, applicability rules, per-kind step sizes) and return
+plain probe results that the discovery driver assembles into a
+``Topology``.
+
+All run functions take the engine's batched fast paths (``batched=True``
+probe variants, vectorized K-S) — results are bit-identical to the legacy
+sequential calls because sample streams are request-keyed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from ..probes.amount import find_amount, find_cu_sharing, find_sharing_batch
+from ..probes.bandwidth import measure_bandwidth
+from ..probes.latency import measure_latency
+from ..probes.linesize import find_fetch_granularity, find_line_size
+from ..probes.runners import SpaceInfo
+from ..probes.size import find_size
+
+__all__ = ["ProbeContext", "ProbeSpec", "SPACE_FAMILIES", "DEVICE_FAMILIES",
+           "space_probe_specs", "device_probe_specs"]
+
+KIB = 1024
+
+
+@dataclass
+class ProbeContext:
+    """Everything a probe family needs to run against one memory space."""
+
+    runner: object                      # CachingRunner (batch-capable)
+    n_samples: int
+    info: SpaceInfo | None = None       # None for device-scope families
+    results: dict = field(default_factory=dict)     # family -> result (space)
+    all_results: dict = field(default_factory=dict)  # space -> family -> result
+    infos: list = field(default_factory=list)        # probed SpaceInfos, in order
+
+
+@dataclass(frozen=True)
+class ProbeSpec:
+    """One registered probe family."""
+
+    family: str
+    run: Callable[[ProbeContext], object]
+    depends: tuple[str, ...] = ()
+    applies: Callable[[SpaceInfo], bool] = lambda info: True
+
+
+# --------------------------------------------------------------------------
+# Space-scoped families (run once per probeable memory space)
+# --------------------------------------------------------------------------
+def _run_size(ctx: ProbeContext):
+    info = ctx.info
+    # Scratchpads are word-granular: probe them at 4 B steps, caches at the
+    # 32 B default until the cold-pass granularity is known (§IV-D).
+    step0 = 4 if info.kind == "scratchpad" else 32
+    return find_size(ctx.runner, info.name, lo=1 * KIB, step=step0,
+                     n_samples=ctx.n_samples, max_bytes=info.max_bytes,
+                     batched=True)
+
+
+def _run_fetch_granularity(ctx: ProbeContext):
+    return find_fetch_granularity(ctx.runner, ctx.info.name,
+                                  n_samples=ctx.n_samples)
+
+
+def _fetch_of(results: dict) -> int:
+    gr = results.get("fetch_granularity")
+    return gr.granularity if (gr is not None and gr.found) else 32
+
+
+def _run_latency(ctx: ProbeContext):
+    # Small caches: keep the fixed-size latency array inside capacity
+    # (paper §IV-C uses 256 x granularity; a 2 KiB constant cache needs a
+    # smaller factor).
+    sr = ctx.results["size"]
+    fetch = _fetch_of(ctx.results)
+    factor = 256
+    if sr.found:
+        factor = max(min(256, sr.size // (2 * fetch)), 8)
+    return measure_latency(ctx.runner, ctx.info.name, fetch_granularity=fetch,
+                           n_samples=ctx.n_samples * 4 + 1,
+                           array_factor=factor)
+
+
+def _run_line_size(ctx: ProbeContext):
+    sr = ctx.results["size"]
+    if not (ctx.info.supports_cold and sr.found):
+        return None
+    return find_line_size(ctx.runner, ctx.info.name, sr.size,
+                          _fetch_of(ctx.results), n_samples=ctx.n_samples,
+                          batched=True)
+
+
+def _run_amount(ctx: ProbeContext):
+    info, sr = ctx.info, ctx.results["size"]
+    if not sr.found:
+        return None
+    if info.supports_amount:
+        return ("per_core", find_amount(ctx.runner, info.name, sr.size,
+                                        ctx.runner.cores_per_sm,
+                                        n_samples=ctx.n_samples,
+                                        batched=True))
+    if info.scope == "chip":
+        # L2-style alignment happens at assembly time (needs the API total);
+        # flag that the family applies so the driver runs align_segments.
+        return ("aligned", sr.size)
+    return None
+
+
+def _run_bandwidth(ctx: ProbeContext):
+    info = ctx.info
+    if not (info.scope == "chip" or info.kind == "memory"):
+        return None
+    return measure_bandwidth(ctx.runner, info.name)
+
+
+SPACE_FAMILIES: tuple[ProbeSpec, ...] = (
+    ProbeSpec("size", _run_size),
+    ProbeSpec("fetch_granularity", _run_fetch_granularity,
+              applies=lambda info: info.supports_cold),
+    ProbeSpec("latency", _run_latency,
+              depends=("size", "fetch_granularity")),
+    ProbeSpec("line_size", _run_line_size,
+              depends=("size", "fetch_granularity"),
+              applies=lambda info: info.supports_cold),
+    ProbeSpec("amount", _run_amount, depends=("size",),
+              applies=lambda info: info.supports_amount
+              or info.scope == "chip"),
+    ProbeSpec("bandwidth", _run_bandwidth,
+              applies=lambda info: info.scope == "chip"
+              or info.kind == "memory"),
+)
+
+
+# --------------------------------------------------------------------------
+# Device-scoped families (run once per device, after the spaces they read)
+# --------------------------------------------------------------------------
+def _run_sharing(ctx: ProbeContext):
+    """§IV-G pairwise physical sharing over core-scope cache spaces.
+
+    Pair order matches the legacy nested loop (leader a, all partners after
+    it), so the assembled ``shared_with`` lists come out identical.
+    """
+    spaces = [i.name for i in ctx.infos
+              if i.supports_sharing and i.scope == "core"]
+    out = []
+    for i, a in enumerate(spaces):
+        sr = ctx.all_results.get(a, {}).get("size")
+        if sr is None or not sr.found:
+            continue
+        out.extend(find_sharing_batch(ctx.runner, a, spaces[i + 1:], sr.size,
+                                      n_samples=ctx.n_samples))
+    return out
+
+
+def _run_cu_sharing(ctx: ProbeContext):
+    """§IV-H AMD-style CU<->sL1d sharing groups."""
+    sl1d = ctx.all_results.get("sL1d", {}).get("size")
+    if sl1d is None or not sl1d.found:
+        return None
+    cu_ids = ctx.runner.cu_ids()
+    if not cu_ids:
+        return None
+    return find_cu_sharing(ctx.runner, cu_ids, sl1d.size,
+                           n_samples=max(ctx.n_samples // 2, 9),
+                           batched=True)
+
+
+def _run_device_memory_latency(ctx: ProbeContext):
+    return measure_latency(ctx.runner, "DeviceMemory", fetch_granularity=4096,
+                           n_samples=ctx.n_samples * 4 + 1, array_factor=4096)
+
+
+def _run_device_memory_bandwidth(ctx: ProbeContext):
+    return measure_bandwidth(ctx.runner, "DeviceMemory")
+
+
+DEVICE_FAMILIES: tuple[ProbeSpec, ...] = (
+    ProbeSpec("sharing", _run_sharing),
+    ProbeSpec("cu_sharing", _run_cu_sharing),
+    ProbeSpec("device_memory_latency", _run_device_memory_latency),
+    ProbeSpec("device_memory_bandwidth", _run_device_memory_bandwidth),
+)
+
+
+def space_probe_specs(info: SpaceInfo) -> list[ProbeSpec]:
+    """The families applicable to one memory space, dependency-complete."""
+    return [spec for spec in SPACE_FAMILIES if spec.applies(info)]
+
+
+def device_probe_specs() -> tuple[ProbeSpec, ...]:
+    return DEVICE_FAMILIES

@@ -11,10 +11,11 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..stats import ks_2samp
+from ..stats import classify_miss_rows, ks_2samp
 
 __all__ = ["AmountResult", "find_amount", "align_segments",
-           "SharingResult", "find_sharing", "CuSharingResult", "find_cu_sharing"]
+           "SharingResult", "find_sharing", "find_sharing_batch",
+           "CuSharingResult", "find_cu_sharing"]
 
 
 def _is_miss(probe: np.ndarray, hit_ref: np.ndarray, miss_ref: np.ndarray,
@@ -40,12 +41,37 @@ class AmountResult:
 
 
 def find_amount(runner, space: str, cache_size: int, cores_per_sm: int,
-                n_samples: int = 65) -> AmountResult:
+                n_samples: int = 65, batched: bool = False) -> AmountResult:
     """Paper §IV-F: pin core A at 0, double core B's index; the first B index
-    on a different segment leaves A's data resident -> amount = cores/B."""
+    on a different segment leaves A's data resident -> amount = cores/B.
+
+    ``batched=True`` probes every B doubling up front and classifies the
+    whole matrix with one vectorized K-S pass; the sequential early-exit
+    semantics are replayed on the classification vector, so results are
+    identical (request-keyed sampling makes the extra probes side-effect
+    free).
+    """
     arr = int(cache_size * 0.9)  # "close to the cache size"
     hit_ref = runner.pchase(space, arr // 4, 32, n_samples)
     miss_ref = runner.pchase(space, cache_size * 4, 32, n_samples)
+
+    if batched:
+        bs = []
+        b = 1
+        while b < cores_per_sm:
+            bs.append(b)
+            b *= 2
+        if not bs:
+            return AmountResult(1, True, -1, [])
+        rows = np.stack([runner.amount_probe(space, 0, b, arr, n_samples)
+                         for b in bs])
+        miss = classify_miss_rows(rows, hit_ref, miss_ref)
+        tested = []
+        for b, m in zip(bs, miss):
+            tested.append(b)
+            if not m:
+                return AmountResult(max(cores_per_sm // b, 1), True, b, tested)
+        return AmountResult(1, True, -1, tested)
 
     tested = []
     b = 1
@@ -91,6 +117,24 @@ def find_sharing(runner, space_a: str, space_b: str, cache_size: int,
     return SharingResult(_is_miss(probe, hit_ref, miss_ref), space_a, space_b)
 
 
+def find_sharing_batch(runner, space_a: str, space_bs: list[str],
+                       cache_size: int,
+                       n_samples: int = 65) -> list[SharingResult]:
+    """All §IV-G partners of ``space_a`` in one probe matrix + one vectorized
+    classification.  Equivalent to ``[find_sharing(runner, space_a, b, ...)
+    for b in space_bs]`` — same reference keys, same per-pair probe keys."""
+    if not space_bs:
+        return []
+    arr = int(cache_size * 0.9)
+    hit_ref = runner.pchase(space_a, arr // 4, 32, n_samples)
+    miss_ref = runner.pchase(space_a, cache_size * 4, 32, n_samples)
+    rows = np.stack([runner.sharing_probe(space_a, b, arr, n_samples)
+                     for b in space_bs])
+    miss = classify_miss_rows(rows, hit_ref, miss_ref)
+    return [SharingResult(bool(m), space_a, b)
+            for m, b in zip(miss, space_bs)]
+
+
 @dataclass(frozen=True)
 class CuSharingResult:
     groups: list[list[int]]          # CU ids sharing one sL1d
@@ -98,11 +142,20 @@ class CuSharingResult:
 
 
 def find_cu_sharing(runner, cu_ids: list[int], cache_size: int,
-                    n_samples: int = 33, space: str = "sL1d") -> CuSharingResult:
+                    n_samples: int = 33, space: str = "sL1d",
+                    batched: bool = False) -> CuSharingResult:
     """Paper §IV-H: test CU pairs for sL1d sharing; no layout assumptions.
 
     The full pairwise sweep is O(n^2); like MT4G we test all pairs (the paper
     notes this explicitly) but short-circuit once a CU is already grouped.
+
+    ``batched=True`` (probe-engine path) probes one leader's whole candidate
+    row at once and classifies it with a single vectorized K-S pass — the
+    dominant cost of MI210-style discovery drops from ~2 K-S tests per pair
+    to 2 matrix operations per group.  The candidate set a leader sees is
+    the same as in the sequential scan (CUs grouped during a leader's own
+    scan are exactly the ones that probe as sharing), so the grouping is
+    identical.
     """
     arr = int(cache_size * 0.9)
     hit_ref = runner.pchase(space, arr // 4, 32, n_samples)
@@ -115,13 +168,28 @@ def find_cu_sharing(runner, cu_ids: list[int], cache_size: int,
             continue
         group = [cu_a]
         assigned[cu_a] = len(groups)
-        for cu_b in cu_ids[i + 1:]:
-            if cu_b in assigned:
-                continue
-            probe = runner.cu_sharing_probe(cu_a, cu_b, arr, n_samples)
-            if _is_miss(probe, hit_ref, miss_ref):
-                group.append(cu_b)
-                assigned[cu_b] = assigned[cu_a]
+        candidates = [cu_b for cu_b in cu_ids[i + 1:] if cu_b not in assigned]
+        if batched and candidates:
+            if hasattr(runner, "cu_sharing_probe_batch"):
+                rows = np.asarray(runner.cu_sharing_probe_batch(
+                    cu_a, candidates, arr, n_samples, space=space))
+            else:
+                rows = np.stack([runner.cu_sharing_probe(cu_a, cu_b, arr,
+                                                         n_samples,
+                                                         space=space)
+                                 for cu_b in candidates])
+            miss = classify_miss_rows(rows, hit_ref, miss_ref)
+            for cu_b, m in zip(candidates, miss):
+                if m:
+                    group.append(cu_b)
+                    assigned[cu_b] = assigned[cu_a]
+        else:
+            for cu_b in candidates:
+                probe = runner.cu_sharing_probe(cu_a, cu_b, arr, n_samples,
+                                                space=space)
+                if _is_miss(probe, hit_ref, miss_ref):
+                    group.append(cu_b)
+                    assigned[cu_b] = assigned[cu_a]
         groups.append(group)
     exclusive = [g[0] for g in groups if len(g) == 1]
     return CuSharingResult(groups, exclusive)

@@ -21,7 +21,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..stats import ks_2samp, ks_statistic
+from ..stats import ks_statistic, ks_statistic_rows
 
 __all__ = ["GranularityResult", "find_fetch_granularity",
            "LineSizeResult", "find_line_size", "snap_pow2"]
@@ -110,8 +110,17 @@ def find_line_size(
     n_samples: int = 65,
     over_factor: float = 1.0625,
     max_line: int = 1024,
+    batched: bool = False,
 ) -> LineSizeResult:
-    """Paper §IV-E with the pivot/MAX heuristic."""
+    """Paper §IV-E with the pivot/MAX heuristic.
+
+    ``batched=True`` (probe-engine path) issues the whole step sweep as one
+    ``pchase_batch`` call — the strides vary, not the array size, so the
+    batch is over (array, step) pairs via per-step calls folded into one
+    vectorized K-S scoring pass.  The early-stop truncation of the
+    sequential loop is applied post-hoc, so the returned result is
+    bit-identical.
+    """
     g2 = max(fetch_granularity // 2, 4)
     arr = int(cache_size * over_factor)
 
@@ -121,18 +130,45 @@ def find_line_size(
     hit_ref = runner.pchase(space, arr, max_line * 8, n_samples)
 
     steps = np.arange(g2, max_line * 2 + g2, g2, dtype=np.int64)
-    hit_score = np.zeros(steps.size)
-    first_hit_step = -1
-    for i, s in enumerate(steps):
-        cur = runner.pchase(space, arr, int(s), n_samples)
-        d_pivot = ks_statistic(cur, pivot)
-        d_hit = ks_statistic(cur, hit_ref)
-        hit_score[i] = d_pivot - d_hit          # >0 -> closer to the hit side
-        if hit_score[i] > 0 and first_hit_step < 0:
-            first_hit_step = int(s)
-        if first_hit_step > 0 and s >= 4 * first_hit_step:
-            steps, hit_score = steps[: i + 1], hit_score[: i + 1]
-            break
+    if batched:
+        # Chunked vector sweep: classify 16 steps per K-S pass, applying the
+        # sequential early-stop between chunks so no more than one chunk of
+        # extra probes is issued past the stop point.
+        chunk = 16
+        scores: list[np.ndarray] = []
+        first_hit_step = -1
+        cut = steps.size
+        for lo in range(0, steps.size, chunk):
+            part = steps[lo: lo + chunk]
+            rows = np.stack([runner.pchase(space, arr, int(s), n_samples)
+                             for s in part])
+            scores.append(ks_statistic_rows(rows, pivot)
+                          - ks_statistic_rows(rows, hit_ref))
+            done = False
+            for i, s in enumerate(part, start=lo):
+                if scores[-1][i - lo] > 0 and first_hit_step < 0:
+                    first_hit_step = int(s)
+                if first_hit_step > 0 and s >= 4 * first_hit_step:
+                    cut = i + 1
+                    done = True
+                    break
+            if done:
+                break
+        hit_score_full = np.concatenate(scores)
+        steps, hit_score = steps[:cut], hit_score_full[:cut]
+    else:
+        hit_score = np.zeros(steps.size)
+        first_hit_step = -1
+        for i, s in enumerate(steps):
+            cur = runner.pchase(space, arr, int(s), n_samples)
+            d_pivot = ks_statistic(cur, pivot)
+            d_hit = ks_statistic(cur, hit_ref)
+            hit_score[i] = d_pivot - d_hit      # >0 -> closer to the hit side
+            if hit_score[i] > 0 and first_hit_step < 0:
+                first_hit_step = int(s)
+            if first_hit_step > 0 and s >= 4 * first_hit_step:
+                steps, hit_score = steps[: i + 1], hit_score[: i + 1]
+                break
 
     if first_hit_step < 0:
         return LineSizeResult(-1, False, -1.0, steps, hit_score)

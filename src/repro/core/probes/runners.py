@@ -47,6 +47,9 @@ class ProbeRunner(Protocol):
     def pchase(self, space: str, array_bytes: int, stride: int,
                n_samples: int) -> np.ndarray: ...
 
+    def pchase_batch(self, space: str, array_bytes_list, stride: int,
+                     n_samples: int) -> np.ndarray: ...
+
     def cold_chase(self, space: str, array_bytes: int, stride: int,
                    n_samples: int) -> np.ndarray: ...
 
@@ -93,6 +96,11 @@ class SimRunner:
     def pchase(self, space, array_bytes, stride, n_samples):
         return self.device.pchase(space, array_bytes, stride, n_samples)
 
+    def pchase_batch(self, space, array_bytes_list, stride, n_samples):
+        """One vectorized call for a whole size sweep (engine fast path)."""
+        return self.device.pchase_batch(space, array_bytes_list, stride,
+                                        n_samples)
+
     def cold_chase(self, space, array_bytes, stride, n_samples):
         return self.device.cold_chase(space, array_bytes, stride, n_samples)
 
@@ -102,11 +110,30 @@ class SimRunner:
     def sharing_probe(self, space_a, space_b, array_bytes, n_samples):
         return self.device.sharing_probe(space_a, space_b, array_bytes, n_samples)
 
-    def cu_sharing_probe(self, cu_a, cu_b, array_bytes, n_samples):
-        return self.device.cu_sharing_probe(cu_a, cu_b, array_bytes, n_samples)
+    def cu_sharing_probe(self, cu_a, cu_b, array_bytes, n_samples,
+                         space="sL1d"):
+        return self.device.cu_sharing_probe(cu_a, cu_b, array_bytes,
+                                            n_samples, space=space)
+
+    def cu_sharing_probe_batch(self, cu_a, cu_bs, array_bytes, n_samples,
+                               space="sL1d"):
+        return self.device.cu_sharing_probe_batch(cu_a, cu_bs, array_bytes,
+                                                  n_samples, space=space)
 
     def bandwidth(self, space, mode="read"):
         return self.device.bandwidth(space, mode)
+
+    def api_size(self, space: str) -> int | None:
+        """API-reported capacity (paper Table I: chip-scope totals come from
+        the driver API, not the benchmark)."""
+        try:
+            return self.device.level(space).size
+        except KeyError:
+            return None
+
+    def cu_ids(self) -> list[int]:
+        """All CU ids participating in sL1d sharing groups (AMD, §IV-H)."""
+        return sorted(cu for grp in self.device.cu_share_groups for cu in grp)
 
     @property
     def cores_per_sm(self) -> int:
@@ -176,6 +203,17 @@ class HostRunner:
             run(perm, iters).block_until_ready()
             out[s] = (time.perf_counter_ns() - t0) / iters
         return out
+
+    def pchase_batch(self, space, array_bytes_list, stride, n_samples):
+        """Batched sweep over array sizes sharing one jitted chase.
+
+        Real hardware cannot overlap dependent chases, so this is a loop —
+        but it amortizes the jit-function lookup and gives the engine one
+        call site to schedule/cache, same as the simulator's vector path.
+        """
+        rows = [self.pchase(space, int(ab), stride, n_samples)
+                for ab in array_bytes_list]
+        return np.stack(rows)
 
     def cold_chase(self, space, array_bytes, stride, n_samples):
         raise NotImplementedError("host runner has no cold-pass control")

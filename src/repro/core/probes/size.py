@@ -18,9 +18,9 @@ import numpy as np
 
 from ..stats import (boundary_suspect, cusum_change_point,
                      geometric_reduction, ks_2samp, ks_change_point,
-                     winsorize)
+                     ks_change_point_scan, winsorize)
 
-__all__ = ["SizeResult", "find_size"]
+__all__ = ["SizeResult", "find_size", "sweep_rows"]
 
 KIB = 1024
 
@@ -50,6 +50,19 @@ def _distribution_shifted(base: np.ndarray, cur: np.ndarray, alpha: float,
     return float(np.median(cur)) > float(np.median(base)) * (1.0 + min_jump)
 
 
+def sweep_rows(runner, space: str, sizes, stride: int, n_samples: int,
+               batched: bool = False) -> np.ndarray:
+    """Sample a whole size grid: one ``pchase_batch`` call on the engine path,
+    N sequential ``pchase`` calls on the legacy path.  Identical rows either
+    way — simulated runners key their sample streams by request, so batching
+    only changes how the work is issued, never what comes back."""
+    if batched and hasattr(runner, "pchase_batch"):
+        return np.asarray(runner.pchase_batch(
+            space, [int(s) for s in sizes], stride, n_samples))
+    return np.stack([runner.pchase(space, int(s), stride, n_samples)
+                     for s in sizes])
+
+
 def find_size(
     runner,
     space: str,
@@ -61,8 +74,15 @@ def find_size(
     max_points: int = 96,
     max_widenings: int = 3,
     max_bytes: int | None = None,
+    batched: bool = False,
 ) -> SizeResult:
-    """Run the full §IV-B workflow against ``runner``/``space``."""
+    """Run the full §IV-B workflow against ``runner``/``space``.
+
+    ``batched=True`` is the probe-engine fast path: the linear sweep (2) is
+    issued as one vectorized ``pchase_batch`` call and the change-point scan
+    (4) runs the vectorized K-S over the whole reduced series at once.  The
+    result is bit-identical to the sequential path.
+    """
     max_bytes = max_bytes or 64 * 1024 * KIB
 
     # -- (1a) exponential doubling until the distribution departs from baseline
@@ -97,12 +117,13 @@ def find_size(
         if span // step > max_points:
             eff_step = max(step, (span // max_points) // step * step)
         sizes = np.arange(sweep_lo, sweep_hi + eff_step, eff_step, dtype=np.int64)
-        rows = np.stack([runner.pchase(space, int(s), step, n_samples)
-                         for s in sizes])
+        rows = sweep_rows(runner, space, sizes, step, n_samples,
+                          batched=batched)
 
         # -- (4) reduce + K-S change point
         reduced = geometric_reduction(rows)
-        cp = ks_change_point(reduced, alpha=alpha, min_segment=3)
+        cp_scan = ks_change_point_scan if batched else ks_change_point
+        cp = cp_scan(reduced, alpha=alpha, min_segment=3)
 
         # -- (3) outlier / boundary check -> widen interval and re-sweep
         need_widen = (not cp.found) or boundary_suspect(reduced) or \

@@ -16,10 +16,18 @@ The simulation model is deliberately behavioral, not cycle-accurate:
   ``G``-byte fetched segment (paper §IV-D).
 * amount/sharing: two actors evict each other iff they map to the same
   physical segment and their combined footprint exceeds it (paper Fig. 3).
+
+Noise is drawn from *request-keyed* streams (``_KeyedSampler``): a probe
+request's samples depend only on (device seed, request signature), never on
+how many probes ran before it.  This is the property the probe engine's
+scheduler/cache/batching builds on — engine and legacy discovery are
+bit-identical for a fixed seed.
 """
 from __future__ import annotations
 
+import hashlib
 import math
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -53,6 +61,53 @@ class SimLevel:
         return self.physical_group or self.name
 
 
+class _KeyedSampler:
+    """Deterministic per-request sampling for the probe engine.
+
+    Every probe request draws from a Philox stream keyed by
+    ``(device seed, request signature)`` instead of one shared stateful
+    stream.  Consequences the engine relies on:
+
+    * identical requests return identical samples — a keyed sample cache is
+      exactly equivalent to re-running the probe;
+    * results are independent of execution order, so the engine's concurrent
+      scheduler and batched sweeps are bit-identical to the legacy
+      sequential loop;
+    * distinct requests get independent streams (64-bit blake2b of the
+      request signature as the Philox key), preserving the statistical
+      independence the K-S machinery assumes.
+
+    A fresh ``Generator`` per request would cost ~20 µs in seed hashing;
+    resetting the counter/key of a thread-local Philox instance costs ~2 µs.
+    Thread-local state keeps the scheduler's worker threads isolated.
+    """
+
+    def __init__(self, seed: int):
+        self.seed = seed & 0xFFFFFFFFFFFFFFFF
+        self._tls = threading.local()
+
+    def generator(self, key: tuple) -> np.random.Generator:
+        tls = self._tls
+        if not hasattr(tls, "gen"):
+            bg = np.random.Philox(key=0)
+            state = bg.state
+            tls.bg, tls.gen = bg, np.random.Generator(bg)
+            tls.key_arr = state["state"]["key"].copy()
+            tls.ctr = state["state"]["counter"].copy()
+            tls.buffer = state["buffer"]
+        digest = hashlib.blake2b(repr(key).encode(), digest_size=8).digest()
+        tls.key_arr[0] = int.from_bytes(digest, "big")
+        tls.key_arr[1] = self.seed
+        tls.ctr[:] = 0
+        tls.bg.state = {
+            "bit_generator": "Philox",
+            "state": {"counter": tls.ctr, "key": tls.key_arr},
+            "buffer": tls.buffer, "buffer_pos": 4,
+            "has_uint32": 0, "uinteger": 0,
+        }
+        return tls.gen
+
+
 @dataclass
 class SimDevice:
     """A virtual device serving probe requests against a known hierarchy."""
@@ -72,8 +127,12 @@ class SimDevice:
     seed: int = 0
 
     def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
+        self._sampler = _KeyedSampler(self.seed)
         self._by_name = {l.name: l for l in self.levels}
+        self._chain_cache: dict[str, list[SimLevel]] = {}
+        self._cu_group_of = {cu: gi
+                             for gi, grp in enumerate(self.cu_share_groups)
+                             for cu in grp}
 
     # ------------------------------------------------------------ helpers
     def level(self, space: str) -> SimLevel:
@@ -86,17 +145,24 @@ class SimDevice:
     def _chain(self, space: str) -> list[SimLevel]:
         """Levels an access targeted at ``space`` passes through, small->large:
         larger caches on the SAME path (constant path on NVIDIA), then the
-        chip-level caches."""
+        chip-level caches.  Memoized: probe loops walk it millions of times."""
+        cached = self._chain_cache.get(space)
+        if cached is not None:
+            return cached
         lvl = self.level(space)
         higher = [l for l in self.levels if l.kind == "cache"
                   and l.size > lvl.size
                   and (l.scope == "chip" or l.path == lvl.path)]
-        return [lvl] + sorted(higher, key=lambda l: l.size)
+        chain = [lvl] + sorted(higher, key=lambda l: l.size)
+        self._chain_cache[space] = chain
+        return chain
 
-    def _lat(self, mean: float, noise: float, n: int) -> np.ndarray:
-        lats = self._rng.normal(mean, noise, size=n)
+    def _lat(self, mean: float, noise: float, n: int, key: tuple) -> np.ndarray:
+        """Latency draw from the request-keyed stream (see _KeyedSampler)."""
+        rng = self._sampler.generator(key)
+        lats = rng.normal(mean, noise, size=n)
         # Injected measurement outliers (paper: disturbances the K-S must absorb)
-        mask = self._rng.random(n) < self.outlier_prob
+        mask = rng.random(n) < self.outlier_prob
         lats[mask] *= self.outlier_scale
         return np.maximum(lats, 1.0)
 
@@ -106,14 +172,12 @@ class SimDevice:
         return touched * line
 
     # -------------------------------------------------------- probe API
-    def pchase(self, space: str, array_bytes: int, stride: int,
-               n_samples: int, warmup: bool = True) -> np.ndarray:
-        """Warm p-chase latencies (paper §IV-A/B): hit level determined by
-        whether the strided footprint fits each level of the chain."""
-        del warmup  # warm pass is implied; cold behavior via cold_chase()
+    def _hit_level(self, space: str, array_bytes: int,
+                   stride: int) -> tuple[float, float]:
+        """(latency mean, noise) of the level a warm strided chase hits."""
         if space == "DeviceMemory":
             # Cache-bypassing load (paper §IV-C: `.cg` / GLC-bit semantics).
-            return self._lat(self.mem_latency, self.mem_noise, n_samples)
+            return self.mem_latency, self.mem_noise
         chain = self._chain(space)
         for lvl in chain:
             fp = self._footprint(array_bytes, stride, lvl.line_size)
@@ -121,8 +185,32 @@ class SimDevice:
             # e.g. an SM sees a single 25 MB half of H100's 50 MB L2).
             usable = lvl.size // max(lvl.amount, 1)
             if fp <= usable:
-                return self._lat(lvl.latency, lvl.noise, n_samples)
-        return self._lat(self.mem_latency, self.mem_noise, n_samples)
+                return lvl.latency, lvl.noise
+        return self.mem_latency, self.mem_noise
+
+    def pchase(self, space: str, array_bytes: int, stride: int,
+               n_samples: int, warmup: bool = True) -> np.ndarray:
+        """Warm p-chase latencies (paper §IV-A/B): hit level determined by
+        whether the strided footprint fits each level of the chain."""
+        del warmup  # warm pass is implied; cold behavior via cold_chase()
+        mean, noise = self._hit_level(space, array_bytes, stride)
+        key = ("pchase", space, int(array_bytes), int(stride), int(n_samples))
+        return self._lat(mean, noise, n_samples, key)
+
+    def pchase_batch(self, space: str, array_bytes_list, stride: int,
+                     n_samples: int) -> np.ndarray:
+        """Batched §IV-B sweep: one call for a whole size grid.
+
+        Row i is bit-identical to ``pchase(space, array_bytes_list[i], ...)``
+        because each row draws from its own request-keyed stream; the batch
+        only amortizes the probe-dispatch overhead of N sequential calls.
+        """
+        out = np.empty((len(array_bytes_list), int(n_samples)))
+        for i, ab in enumerate(array_bytes_list):
+            mean, noise = self._hit_level(space, int(ab), stride)
+            key = ("pchase", space, int(ab), int(stride), int(n_samples))
+            out[i] = self._lat(mean, noise, int(n_samples), key)
+        return out
 
     def cold_chase(self, space: str, array_bytes: int, stride: int,
                    n_samples: int) -> np.ndarray:
@@ -138,9 +226,10 @@ class SimDevice:
         chain = self._chain(lvl.name)
         next_lat = chain[1].latency if len(chain) > 1 else self.mem_latency
         next_noise = chain[1].noise if len(chain) > 1 else self.mem_noise
+        key = ("cold", space, int(array_bytes), int(stride), int(n_samples))
         lats = np.where(miss,
-                        self._lat(next_lat, next_noise, idx.size),
-                        self._lat(lvl.latency, lvl.noise, idx.size))
+                        self._lat(next_lat, next_noise, idx.size, key + ("m",)),
+                        self._lat(lvl.latency, lvl.noise, idx.size, key + ("h",)))
         return lats
 
     def _next_latency(self, lvl: SimLevel) -> float:
@@ -158,9 +247,12 @@ class SimDevice:
         per_seg_cores = max(self.cores_per_sm // max(lvl.amount, 1), 1)
         same_segment = (core_a // per_seg_cores) == (core_b // per_seg_cores)
         evicted = same_segment and 2 * array_bytes > seg_size
+        key = ("amount", space, int(core_a), int(core_b), int(array_bytes),
+               int(n_samples))
         if evicted:
-            return self._lat(self._next_latency(lvl), self.mem_noise, n_samples)
-        return self._lat(lvl.latency, lvl.noise, n_samples)
+            return self._lat(self._next_latency(lvl), self.mem_noise,
+                             n_samples, key)
+        return self._lat(lvl.latency, lvl.noise, n_samples, key)
 
     def sharing_probe(self, space_a: str, space_b: str, array_bytes: int,
                       n_samples: int) -> np.ndarray:
@@ -169,31 +261,60 @@ class SimDevice:
         la, lb = self.level(space_a), self.level(space_b)
         shared = la.group == lb.group
         evicted = shared and 2 * array_bytes > la.size
+        key = ("sharing", space_a, space_b, int(array_bytes), int(n_samples))
         if evicted:
-            return self._lat(self._next_latency(la), self.mem_noise, n_samples)
-        return self._lat(la.latency, la.noise, n_samples)
+            return self._lat(self._next_latency(la), self.mem_noise,
+                             n_samples, key)
+        return self._lat(la.latency, la.noise, n_samples, key)
 
     def cu_sharing_probe(self, cu_a: int, cu_b: int, array_bytes: int,
                          n_samples: int, space: str = "sL1d") -> np.ndarray:
         """AMD-style sL1d sharing across CU ids (§IV-H)."""
         lvl = self.level(space)
-        group_of = {}
-        for gi, grp in enumerate(self.cu_share_groups):
-            for cu in grp:
-                group_of[cu] = gi
+        group_of = self._cu_group_of
         shared = (cu_a in group_of and cu_b in group_of
                   and group_of[cu_a] == group_of[cu_b] and cu_a != cu_b)
         evicted = shared and 2 * array_bytes > lvl.size
+        key = ("cu", space, int(cu_a), int(cu_b), int(array_bytes),
+               int(n_samples))
         if evicted:
-            return self._lat(self._next_latency(lvl), self.mem_noise, n_samples)
-        return self._lat(lvl.latency, lvl.noise, n_samples)
+            return self._lat(self._next_latency(lvl), self.mem_noise,
+                             n_samples, key)
+        return self._lat(lvl.latency, lvl.noise, n_samples, key)
+
+    def cu_sharing_probe_batch(self, cu_a: int, cu_bs, array_bytes: int,
+                               n_samples: int,
+                               space: str = "sL1d") -> np.ndarray:
+        """One leader's whole §IV-H candidate row in a single call.
+
+        Row i is bit-identical to ``cu_sharing_probe(cu_a, cu_bs[i], ...)``
+        (request-keyed streams); batching removes the per-pair dispatch of
+        the O(n²) pairwise sweep — the dominant cost on MI210-style devices.
+        """
+        lvl = self.level(space)
+        group_of = self._cu_group_of
+        ga = group_of.get(cu_a)
+        next_lat = self._next_latency(lvl)
+        out = np.empty((len(cu_bs), int(n_samples)))
+        for i, cu_b in enumerate(cu_bs):
+            shared = (ga is not None and group_of.get(cu_b) == ga
+                      and cu_a != cu_b)
+            evicted = shared and 2 * array_bytes > lvl.size
+            key = ("cu", space, int(cu_a), int(cu_b), int(array_bytes),
+                   int(n_samples))
+            if evicted:
+                out[i] = self._lat(next_lat, self.mem_noise, n_samples, key)
+            else:
+                out[i] = self._lat(lvl.latency, lvl.noise, n_samples, key)
+        return out
 
     def bandwidth(self, space: str, mode: str = "read") -> float:
         table = self.read_bw if mode == "read" else self.write_bw
         base = table.get(space)
         if base is None:
             raise KeyError(f"{self.name}: no {mode} bandwidth for '{space}'")
-        return float(base * self._rng.normal(1.0, 0.02))
+        rng = self._sampler.generator(("bw", space, mode))
+        return float(base * rng.normal(1.0, 0.02))
 
     # ------------------------------------------------------ ground truth
     def ground_truth(self) -> dict[str, dict]:

@@ -1,0 +1,180 @@
+"""Vectorized sample-set statistics for the probe engine.
+
+The probe engine runs the same statistics the paper describes — the K-S
+change-point scan (§IV-B step 4) and K-S hit/miss classification (§IV-F/G/H)
+— but over whole sample matrices at once instead of one Python-level
+``ks_2samp`` call per candidate/probe:
+
+* ``ks_scan``            — every candidate split of a reduced series in one
+                           broadcasted ECDF pass (the legacy scan makes ~N
+                           ``ks_2samp`` calls, the dominant cost of
+                           ``find_size``);
+* ``ks_change_point_scan`` — drop-in for ``ks_change_point`` built on it,
+                           bit-identical decisions;
+* ``ks_statistic_rows``  — per-row K-S statistic of a probe matrix against a
+                           shared reference distribution;
+* ``classify_miss_rows`` — the §IV-F/G/H hit-vs-miss classifier, vectorized
+                           over many probes (the O(n²) CU-sharing sweep).
+
+Exactness matters: the engine must produce the same topology as the legacy
+sequential loop, so every function here reproduces its scalar counterpart's
+arithmetic (integer ECDF counts divided by segment sizes, tie handling via
+right-continuous ECDFs) rather than approximating it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .cpd import ChangePoint, _l1_refine
+from .ks import ks_2samp, ks_statistic
+
+__all__ = ["ks_scan", "ks_change_point_scan", "ks_statistic_rows",
+           "ks_2samp_rows", "classify_miss_rows"]
+
+
+def ks_scan(series: np.ndarray, alpha: float = 0.01,
+            min_segment: int = 3) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """K-S statistic of every admissible split of ``series`` in one pass.
+
+    Returns ``(idxs, d, crit)`` where ``d[i]`` equals
+    ``ks_statistic(series[:idxs[i]], series[idxs[i]:])`` exactly and ``crit``
+    is the per-split critical value (eq. 1).
+
+    Method: sort the series once; for split index k, the left segment's ECDF
+    evaluated at the j-th smallest element is ``|{sorted[:j+1]} ∩ left| / k``
+    — a cumulative sum of a boolean membership matrix, broadcast over all
+    candidate splits at once.  Ties are handled by only evaluating at the
+    right edge of each tie group, which is where a right-continuous ECDF
+    difference is attained.
+    """
+    s = np.asarray(series, dtype=np.float64).ravel()
+    n = s.size
+    idxs = np.arange(min_segment, n - min_segment + 1)
+    if n < 2 * min_segment or idxs.size == 0:
+        return np.zeros(0, np.int64), np.zeros(0), np.zeros(0)
+
+    order = np.argsort(s, kind="stable")
+    sorted_s = s[order]
+    # membership[i, j]: does the j-th smallest element belong to the left
+    # segment of split idxs[i]?  (left segment = original indices < idxs[i])
+    membership = order[None, :] < idxs[:, None]
+    left_counts = np.cumsum(membership, axis=1)
+    pos = np.arange(1, n + 1)[None, :]
+    cdf_l = left_counts / idxs[:, None].astype(np.float64)
+    cdf_r = (pos - left_counts) / (n - idxs)[:, None].astype(np.float64)
+    diff = np.abs(cdf_l - cdf_r)
+    # Right-continuous ECDF: within a tie group only the last position holds
+    # the full count both sides agree on; mask the rest.
+    tie_edge = np.concatenate([sorted_s[:-1] < sorted_s[1:], [True]])
+    diff[:, ~tie_edge] = 0.0
+    d = diff.max(axis=1)
+    crit = np.sqrt(-0.5 * (n / (idxs * (n - idxs))) * np.log(alpha / 2.0))
+    return idxs, d, crit
+
+
+def ks_change_point_scan(series: np.ndarray, alpha: float = 0.01,
+                         min_segment: int = 3,
+                         mode: str = "best") -> ChangePoint:
+    """Vectorized drop-in for ``ks_change_point`` (same decisions).
+
+    The scan produces the full (D, d_alpha) vectors; the decision logic —
+    best-score selection, the L1 boundary refinement, and the final
+    ``ks_2samp`` at the chosen index — is identical to the sequential
+    implementation, so a fixed input yields a bit-identical ``ChangePoint``.
+    """
+    s = np.asarray(series, dtype=np.float64).ravel()
+    n = s.size
+    if n < 2 * min_segment:
+        return ChangePoint(-1, False, 0.0, 1.0, 0.0, alpha)
+
+    idxs, d, crit = ks_scan(s, alpha=alpha, min_segment=min_segment)
+    reject = d > crit
+    rejected = [int(i) for i in idxs[reject]]
+
+    if mode == "first" and rejected:
+        first = rejected[0]
+        res = ks_2samp(s[:first], s[first:], alpha=alpha)
+        upto = [r for r in rejected if r <= first]
+        return ChangePoint(first, True, res.statistic, res.pvalue,
+                           res.confidence, alpha, upto)
+
+    score = d / np.maximum(crit, 1e-12)
+    best_i = int(np.argmax(score))        # first max, like the scalar loop
+    best_idx = int(idxs[best_i])
+
+    if reject[best_i]:
+        refined = _l1_refine(s, best_idx, window=max(3, n // 10),
+                             min_segment=min_segment)
+        best = ks_2samp(s[:refined], s[refined:], alpha=alpha)
+        return ChangePoint(refined, True, best.statistic, best.pvalue,
+                           best.confidence, alpha, rejected)
+    best = ks_2samp(s[:best_idx], s[best_idx:], alpha=alpha)
+    return ChangePoint(-1, False, best.statistic, best.pvalue, 0.0, alpha,
+                       rejected)
+
+
+def ks_statistic_rows(rows: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """Per-row two-sample K-S statistic against one shared reference.
+
+    ``out[i] == ks_statistic(rows[i], ref)`` exactly, for a (k, n) probe
+    matrix and an m-sample reference, via one argsort over the pooled
+    (k, n+m) matrix.
+    """
+    rows = np.asarray(rows, dtype=np.float64)
+    if rows.ndim == 1:
+        rows = rows[None, :]
+    ref = np.asarray(ref, dtype=np.float64).ravel()
+    k, n = rows.shape
+    m = ref.size
+    if n == 0 or m == 0:
+        raise ValueError("ks_statistic_rows needs non-empty samples")
+
+    pooled = np.concatenate([rows, np.broadcast_to(ref, (k, m))], axis=1)
+    order = np.argsort(pooled, axis=1, kind="stable")
+    sorted_pool = np.take_along_axis(pooled, order, axis=1)
+    row_counts = np.cumsum(order < n, axis=1)
+    pos = np.arange(1, n + m + 1)[None, :]
+    diff = np.abs(row_counts / n - (pos - row_counts) / m)
+    tie_edge = np.concatenate(
+        [sorted_pool[:, :-1] < sorted_pool[:, 1:], np.ones((k, 1), bool)],
+        axis=1)
+    diff[~tie_edge] = 0.0
+    return diff.max(axis=1)
+
+
+def ks_2samp_rows(rows: np.ndarray, ref: np.ndarray,
+                  alpha: float = 0.05) -> tuple[np.ndarray, np.ndarray]:
+    """(statistic, reject) arrays of per-row K-S tests vs a shared reference."""
+    rows = np.asarray(rows, dtype=np.float64)
+    if rows.ndim == 1:
+        rows = rows[None, :]
+    ref = np.asarray(ref, dtype=np.float64).ravel()
+    d = ks_statistic_rows(rows, ref)
+    n, m = rows.shape[1], ref.size
+    crit = np.sqrt(-0.5 * ((n + m) / (n * m)) * np.log(alpha / 2.0))
+    return d, d > crit
+
+
+def classify_miss_rows(rows: np.ndarray, hit_ref: np.ndarray,
+                       miss_ref: np.ndarray,
+                       alpha: float = 0.01) -> np.ndarray:
+    """Vectorized §IV-F/G/H hit-vs-miss classification.
+
+    ``out[i]`` reproduces ``probes.amount._is_miss(rows[i], hit_ref,
+    miss_ref, alpha)``: K-S against both references; when both or neither
+    reject, fall back to median proximity.
+    """
+    rows = np.asarray(rows, dtype=np.float64)
+    if rows.ndim == 1:
+        rows = rows[None, :]
+    _, differs_hit = ks_2samp_rows(rows, hit_ref, alpha=alpha)
+    _, differs_miss = ks_2samp_rows(rows, miss_ref, alpha=alpha)
+
+    is_miss = differs_hit & ~differs_miss
+    ambiguous = ~(differs_hit ^ differs_miss)
+    if np.any(ambiguous):
+        pm = np.median(rows[ambiguous], axis=1)
+        hm = float(np.median(hit_ref))
+        mm = float(np.median(miss_ref))
+        is_miss[ambiguous] = np.abs(pm - mm) < np.abs(pm - hm)
+    return is_miss

@@ -90,6 +90,10 @@ class Supervisor:
                 if self.backoff_s:
                     time.sleep(self.backoff_s)
                 template = state_template if state_template is not None else state
+                # A step failure propagates without draining the async
+                # writer; join it first so an in-flight save is visible as a
+                # restore point instead of being raced past.
+                self.ckpt.wait()
                 last = self.ckpt.latest_step()
                 if last is None:
                     state, start = init_state, 0

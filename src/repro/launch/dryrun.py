@@ -211,6 +211,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
                                        - ma.alias_size_in_bytes),
         }
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per program
+            cost = cost[0] if cost else {}
         record["cost"] = {k: float(v) for k, v in cost.items()
                           if isinstance(v, (int, float))}
         txt = compiled.as_text()

@@ -13,24 +13,19 @@ import numpy as np
 __all__ = ["make_production_mesh", "make_subslice_mesh", "make_debug_mesh"]
 
 
-def _axis_types(n):
-    import jax
-    return (jax.sharding.AxisType.Auto,) * n
-
-
 def make_production_mesh(*, multi_pod: bool = False):
-    import jax
+    from repro.compat import make_mesh
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for the in-CI dry-run test (8 forced host devices)."""
-    import jax
+    from repro.compat import make_mesh
 
-    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_subslice_mesh(base_shape=(16, 16), drop_data_rows: int = 8,
@@ -39,8 +34,9 @@ def make_subslice_mesh(base_shape=(16, 16), drop_data_rows: int = 8,
     data axis (the checkpointer reshards state onto it)."""
     import jax
 
+    from repro.compat import mesh_from_devices
+
     new_shape = (base_shape[0] - drop_data_rows, base_shape[1])
     n = int(np.prod(new_shape))
     devices = np.asarray(jax.devices()[:n]).reshape(new_shape)
-    return jax.sharding.Mesh(devices, axes,
-                             axis_types=_axis_types(len(axes)))
+    return mesh_from_devices(devices, axes)

@@ -38,8 +38,8 @@ def main(argv=None) -> int:
         cfg = cfg.replace(dtype="float32")
     model = get_model(cfg)
     d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = jax.make_mesh((d, m), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((d, m), ("data", "model"))
 
     params, pspecs = model.init(jax.random.PRNGKey(0))
     if args.ckpt_dir:

@@ -65,8 +65,8 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch)
     model = get_model(cfg)
     d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = jax.make_mesh((d, m), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((d, m), ("data", "model"))
 
     tc = TrainConfig(opt=OptConfig(lr=args.lr, warmup_steps=10,
                                    total_steps=args.steps),

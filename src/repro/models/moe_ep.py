@@ -28,6 +28,8 @@ import jax.ad_checkpoint
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 __all__ = ["moe_ffn_ep"]
 
 
@@ -43,11 +45,10 @@ def _positions_within_groups(group_ids: jax.Array, n_groups: int,
     return ranks
 
 
-def _ep_body(x, router, w1, w3, w2, *, cfg, dp_axes, ep_axis, tp_axis):
+def _ep_body(x, router, w1, w3, w2, *, cfg, dp_axes, ep_axis, tp_axis, dsz):
     """shard_map body. x (B_loc, S, d); w* sharded: E over ep, ff over tp."""
     b_loc, s, d = x.shape
     e, k = cfg.moe_experts, cfg.moe_top_k
-    dsz = jax.lax.axis_size(ep_axis)
     e_loc = e // dsz
     t = b_loc * s
     cf = cfg.moe_capacity_factor
@@ -129,8 +130,8 @@ def moe_ffn_ep(p, x: jax.Array, cfg, mesh) -> tuple[jax.Array, jax.Array]:
 
     body = lambda xx, r, a, b, c: _ep_body(
         xx, r, a, b, c, cfg=cfg, dp_axes=dp_axes, ep_axis=ep_axis,
-        tp_axis=tp_axis)
-    y, probs = jax.shard_map(
+        tp_axis=tp_axis, dsz=int(mesh.shape[ep_axis]))
+    y, probs = shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_entry, None, None),         # x: batch over DP
                   P(None, None),                      # router: replicated

@@ -1,0 +1,86 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The suite's property tests use a small slice of the hypothesis API:
+``given``/``settings`` decorators and the ``integers``/``floats``/``lists``/
+``sampled_from`` strategies.  This shim replays ``max_examples`` seeded,
+deterministic examples through the same decorator surface, so the property
+tests collect and run on machines without the real package (the container
+image does not ship it).  When hypothesis *is* importable it is re-exported
+unchanged, so nothing is lost where it exists.
+
+The example seed is derived from the test's qualified name, making failures
+reproducible run-to-run without any shared state between tests.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import hashlib
+
+    import numpy as np
+
+    class _Strategy:
+        """A draw function over a seeded numpy Generator."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            max_examples = getattr(fn, "_compat_max_examples", 10)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                seed = int.from_bytes(hashlib.blake2b(
+                    fn.__qualname__.encode(), digest_size=8).digest(), "big")
+                rng = np.random.default_rng(seed)
+                for _ in range(max_examples):
+                    pos = tuple(s.example(rng) for s in arg_strategies)
+                    kws = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *pos, **kwargs, **kws)
+
+            # pytest follows __wrapped__ when inspecting signatures and would
+            # otherwise mistake the strategy parameters for fixtures.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,0 +1,31 @@
+"""Shared test configuration.
+
+Two things must happen before any test module runs:
+
+1. ``XLA_FLAGS`` must force a multi-device host platform *before* jax is
+   first imported anywhere in the process.  Individual test modules used to
+   set this themselves, but pytest imports modules in collection order, so
+   whichever module touched jax first won — and every mesh test after it
+   failed on a single-device CPU.  conftest is imported before all of them.
+2. ``src/`` must be importable so the suite runs with a plain ``pytest``
+   invocation as well as the tier-1 ``PYTHONPATH=src`` form.
+"""
+import os
+import sys
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+if _COUNT_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_COUNT_FLAG}=8").strip()
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (subprocess drivers, full dry-runs); "
+        "deselect with -m 'not slow'")

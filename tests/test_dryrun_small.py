@@ -13,6 +13,10 @@ import textwrap
 
 import pytest
 
+# Subprocess drivers that compile multi-device programs: the suite's
+# slowest tests, deselected by `make test-fast`.
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -12,6 +12,10 @@ import textwrap
 
 import pytest
 
+# Subprocess drivers that compile multi-device programs: the suite's
+# slowest tests, deselected by `make test-fast`.
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -43,8 +47,8 @@ def test_elastic_restore_onto_smaller_mesh(tmp_path):
         cfg = get_config("internlm2-1.8b").smoke().replace(dtype="float32")
         model = get_model(cfg)
         tc = TrainConfig()
-        mesh_big = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh_big = make_mesh((4, 2), ("data", "model"))
 
         state, pspecs = init_train_state(model, jax.random.PRNGKey(0), tc)
         ospecs = opt_state_specs(pspecs, tc.opt,

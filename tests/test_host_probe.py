@@ -21,10 +21,12 @@ def runner():
 
 class TestHostPChase:
     def test_small_vs_large_latency_ordering(self, runner):
-        small = runner.pchase("host-cache", 16 * 1024, 64, 5)   # fits L1/L2
-        large = runner.pchase("host-cache", 64 * MIB, 64, 5)    # DRAM-bound
-        # Median chase step over 64 MiB must be slower than over 16 KiB.
-        assert np.median(large) > np.median(small) * 1.3
+        small = runner.pchase("host-cache", 16 * 1024, 64, 7)   # fits L1/L2
+        large = runner.pchase("host-cache", 64 * MIB, 64, 7)    # DRAM-bound
+        # Best-case chase step over 64 MiB must be slower than over 16 KiB.
+        # Min, not median: on shared CI hosts a steal-time spike can inflate
+        # the small-array samples; the minimum is the uncontended estimate.
+        assert np.min(large) > np.min(small) * 1.3
 
     def test_samples_positive_and_finite(self, runner):
         lats = runner.pchase("host-cache", 1 * MIB, 64, 7)

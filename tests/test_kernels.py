@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# Pallas interpret-mode kernel sweeps: jit-heavy.
+# Deselected by `make test-fast`.
+pytestmark = pytest.mark.slow
+from _hypothesis_compat import given, settings, st
 
 from repro.core.probes.runners import sattolo_cycle
 from repro.kernels import ops, ref

@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Full-model jit compiles (one per arch): minutes of XLA time.
+# Deselected by `make test-fast`.
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, get_config, shape_for
 from repro.models import Runtime, get_model
 

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.models.common import ParamBuilder
 from repro.models.moe import init_moe, moe_ffn
@@ -37,8 +38,7 @@ def test_ep_matches_gspmd(mesh_shape, names):
         pytest.skip("not enough devices")
     cfg, p, x = _setup()
     y0, p0 = moe_ffn(p, x, cfg)
-    mesh = jax.make_mesh(mesh_shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    mesh = make_mesh(mesh_shape, names)
     y1, p1 = jax.jit(lambda pp, xx: moe_ffn_ep(pp, xx, cfg, mesh))(p, x)
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
                                rtol=2e-5, atol=2e-5)
@@ -50,8 +50,7 @@ def test_ep_gradients_flow():
     if jax.device_count() < 2:
         pytest.skip("needs 2 devices (full suite may init jax early)")
     cfg, p, x = _setup()
-    mesh = jax.make_mesh((2,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((2,), ("data",))
 
     def loss(pp):
         y, _ = moe_ffn_ep(pp, x, cfg, mesh)
@@ -69,7 +68,6 @@ def test_ep_capacity_drops_are_bounded():
     if jax.device_count() < 2:
         pytest.skip("needs 2 devices (full suite may init jax early)")
     cfg, p, x = _setup(cf=1.0)
-    mesh = jax.make_mesh((2,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((2,), ("data",))
     y1, _ = jax.jit(lambda: moe_ffn_ep(p, x, cfg, mesh))()
     assert np.all(np.isfinite(np.asarray(y1)))

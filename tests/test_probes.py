@@ -6,7 +6,7 @@ granularities, amounts, and sharing layouts of the virtual H100/MI210/v5e.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.probes import (
     SimRunner, align_segments, find_amount, find_cu_sharing,
@@ -74,15 +74,18 @@ class TestSizeProbe:
 
 
 # --------------------------------------------------------------- latency
+# Assertions use p50 — the headline stat discovery reports — because the
+# simulator injects rare 30x outliers that the mean is (by design) not
+# robust to: one outlier in 257 samples shifts the mean by several cycles.
 class TestLatencyProbe:
     def test_h100_l1_latency(self, h100):
         lat = measure_latency(h100, "L1", fetch_granularity=32)
-        assert abs(lat.mean - 38.0) < 3.0
+        assert abs(lat.p50 - 38.0) < 3.0
         assert lat.p95 >= lat.p50
 
     def test_mi210_lds_latency(self, mi210):
         lat = measure_latency(mi210, "LDS", fetch_granularity=4)
-        assert abs(lat.mean - 55.0) < 4.0
+        assert abs(lat.p50 - 55.0) < 4.0
 
     def test_device_memory_latency(self, h100):
         lat = measure_latency(h100, "DeviceMemory", fetch_granularity=4096,

@@ -6,9 +6,14 @@ they must agree to float tolerance for arbitrary shapes (hypothesis-swept).
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.rwkv6 import wkv_chunked, wkv_scan
+import pytest
+
+# 20 hypothesis examples x jit-compiled scans: the suite's slowest module.
+# Deselected by `make test-fast`.
+pytestmark = pytest.mark.slow
 
 
 def _rand(key, shape, lo=-1.0, hi=1.0):

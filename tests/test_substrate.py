@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Train-loop/checkpoint/serve integration: many jit compiles.
+# Deselected by `make test-fast`.
+pytestmark = pytest.mark.slow
+
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.data import ByteCorpus, DataConfig, SyntheticLM
@@ -192,7 +196,8 @@ class TestCompression:
         mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
         g = jnp.linspace(-1, 1, 32)
         e = jnp.zeros(32)
-        fn = jax.jit(jax.shard_map(
+        from repro.compat import shard_map
+        fn = jax.jit(shard_map(
             lambda gg, ee: __import__("repro.train.grad_compress",
                                       fromlist=["compressed_psum"]
                                       ).compressed_psum(gg, ee, "d"),
