@@ -5,12 +5,14 @@
 #                     dry-runs); sub-minute signal while iterating
 #   make test-engine— just the probe-engine + probe/stat layers
 #   make bench      — the benchmark harness (paper tables + engine_speedup)
+#   make bench-gate — the CI regression gate: gated bench rows vs the
+#                     committed BENCH_BASELINE.json budgets
 
 PY      ?= python
 PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-engine bench
+.PHONY: test test-fast test-engine bench bench-gate
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -24,3 +26,9 @@ test-engine:
 
 bench:
 	$(ENV) $(PY) benchmarks/run.py
+
+bench-gate:
+	$(PY) benchmarks/check_regression.py --self-test
+	$(ENV) $(PY) benchmarks/run.py --json \
+		--only engine_speedup,topology_query --out bench_current.json
+	$(PY) benchmarks/check_regression.py bench_current.json BENCH_BASELINE.json

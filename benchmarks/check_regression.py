@@ -1,0 +1,249 @@
+"""CI bench-regression gate over ``benchmarks/run.py --json`` rows.
+
+Compares a current run against the committed ``BENCH_BASELINE.json``:
+
+* **correctness fields hard-fail**: ``identical=True`` flipping to False,
+  a gated row erroring or disappearing, or the query ``found`` fraction
+  dropping — these mean the engine/store changed *answers*, not speed;
+* **ratio metrics hard-fail on >tol regression**: ``engine_speedup``'s
+  ``speedup`` and ``topology_query``'s ``warm_speedup`` are wall-time
+  *ratios* measured within one process, so they are stable on shared CI
+  boxes where absolute wall times are not (default tol: 25%);
+* **absolute wall times warn only**: ``us`` and throughput fields
+  (``batched_qps``) vary with CI-box steal time; a >tol slowdown prints a
+  warning but does not fail the build.
+
+Exit status: 0 clean (warnings allowed), 1 on any hard failure.
+
+``--self-test`` verifies the gate itself: it injects a speed regression and
+a correctness flip into synthetic rows and exits nonzero unless the checker
+flags both (and passes the clean pair) — CI runs this so a broken gate
+cannot silently wave regressions through.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+
+# Per gated row: which derived metrics are ratios (hard gate), which are
+# correctness fields (hard gate, exact/at-least), which warn only.
+GATES: dict[str, dict] = {
+    "engine_speedup": {
+        "ratios": ("speedup",),
+        "bools": ("identical",),
+    },
+    "topology_query": {
+        "ratios": ("warm_speedup",),
+        "ratio_floors": {"warm_speedup": 10.0},   # acceptance: >=10x warm hit
+        "bools": ("identical",),
+        "fractions": ("found",),
+        "warn_metrics": ("batched_qps",),
+    },
+}
+
+
+def parse_derived(derived: str) -> dict[str, str]:
+    """``"cold=123us_warm_speedup=2.2x_identical=True"`` -> {...}.
+
+    Tokens are ``_``-separated.  Metric *names* contain underscores
+    (``warm_speedup``, ``batched_qps``) while gated *values* do not, so a
+    run of tokens without ``=`` is the prefix of the next key; a trailing
+    run with no following key joins the previous value (keeps free-text
+    rows like ``25/25_attrs`` from crashing the parser).
+    """
+    out: dict[str, str] = {}
+    pending: list[str] = []
+    last = None
+    for tok in derived.split("_"):
+        if "=" in tok:
+            k, _, v = tok.partition("=")
+            key = "_".join(pending + [k])
+            out[key] = v
+            pending, last = [], key
+        else:
+            pending.append(tok)
+    if pending and last is not None:
+        out[last] += "_" + "_".join(pending)
+    return out
+
+
+def as_number(raw: str) -> float | None:
+    """Strip unit suffixes (``us``, ``x``) / parse ``a/b`` fractions."""
+    s = raw.strip()
+    if "/" in s:
+        num, _, den = s.partition("/")
+        try:
+            return float(num) / float(den)
+        except (ValueError, ZeroDivisionError):
+            return None
+    while s and not (s[-1].isdigit() or s[-1] == "."):
+        s = s[:-1]
+    try:
+        return float(s)
+    except ValueError:
+        return None
+
+
+@dataclass
+class GateReport:
+    failures: list[str]
+    warnings: list[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+
+def _index(rows: list[dict]) -> dict[str, dict]:
+    return {r["name"]: r for r in rows}
+
+
+def compare(current: list[dict], baseline: list[dict], *,
+            ratio_tol: float = 0.25, wall_tol: float = 0.25) -> GateReport:
+    cur, base = _index(current), _index(baseline)
+    failures: list[str] = []
+    warnings: list[str] = []
+
+    for name, gate in GATES.items():
+        b = base.get(name)
+        if b is None:
+            warnings.append(f"{name}: not in baseline — skipped")
+            continue
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"{name}: gated row missing from current run")
+            continue
+        if c["derived"].startswith("ERROR_"):
+            failures.append(f"{name}: errored — {c['derived']}")
+            continue
+        cd, bd = parse_derived(c["derived"]), parse_derived(b["derived"])
+
+        for metric in gate.get("bools", ()):
+            if cd.get(metric) != "True":
+                failures.append(
+                    f"{name}: correctness field {metric}={cd.get(metric)} "
+                    f"(must be True)")
+
+        for metric in gate.get("fractions", ()):
+            cv, bv = as_number(cd.get(metric, "")), as_number(bd.get(metric, ""))
+            if cv is None or (bv is not None and cv < bv):
+                failures.append(
+                    f"{name}: correctness field {metric} dropped "
+                    f"({bd.get(metric)} -> {cd.get(metric)})")
+
+        for metric in gate.get("ratios", ()):
+            cv, bv = as_number(cd.get(metric, "")), as_number(bd.get(metric, ""))
+            if cv is None:
+                failures.append(f"{name}: ratio metric {metric} missing")
+                continue
+            floor = gate.get("ratio_floors", {}).get(metric)
+            if floor is not None and cv < floor:
+                failures.append(
+                    f"{name}: {metric}={cv:.2f} below hard floor {floor:.0f}")
+            if bv is not None and cv < bv * (1.0 - ratio_tol):
+                failures.append(
+                    f"{name}: {metric} regressed >{ratio_tol:.0%} "
+                    f"({bv:.2f} -> {cv:.2f})")
+
+        for metric in gate.get("warn_metrics", ()):
+            cv, bv = as_number(cd.get(metric, "")), as_number(bd.get(metric, ""))
+            if cv is not None and bv is not None and cv < bv * (1.0 - wall_tol):
+                warnings.append(
+                    f"{name}: {metric} down >{wall_tol:.0%} "
+                    f"({bv:.0f} -> {cv:.0f}) — wall-clock, warn only")
+
+        cu, bu = float(c.get("us", 0)), float(b.get("us", 0))
+        if bu > 0 and cu > bu * (1.0 + wall_tol):
+            warnings.append(
+                f"{name}: wall time up >{wall_tol:.0%} "
+                f"({bu:.0f}us -> {cu:.0f}us) — warn only")
+    return GateReport(failures, warnings)
+
+
+def _load(path: str) -> list[dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: expected a JSON array of bench rows")
+    return rows
+
+
+def self_test() -> int:
+    """Exercise the gate on injected regressions; 0 iff the gate behaves."""
+    baseline = [
+        {"name": "engine_speedup", "us": 240000.0,
+         "derived": "legacy=530000us_speedup=2.20x_identical=True"},
+        {"name": "topology_query", "us": 600.0,
+         "derived": "cold=320000us_warm_speedup=500.0x_batched_qps=170000_"
+                     "found=2000/2000_identical=True"},
+    ]
+    clean = [
+        {"name": "engine_speedup", "us": 250000.0,
+         "derived": "legacy=540000us_speedup=2.16x_identical=True"},
+        {"name": "topology_query", "us": 640.0,
+         "derived": "cold=315000us_warm_speedup=492.2x_batched_qps=165000_"
+                     "found=2000/2000_identical=True"},
+    ]
+    speed_regressed = json.loads(json.dumps(clean))
+    speed_regressed[0]["derived"] = \
+        "legacy=530000us_speedup=1.40x_identical=True"     # >25% ratio drop
+    correctness_broken = json.loads(json.dumps(clean))
+    correctness_broken[1]["derived"] = correctness_broken[1]["derived"] \
+        .replace("identical=True", "identical=False")
+    floor_broken = json.loads(json.dumps(clean))
+    floor_broken[1]["derived"] = floor_broken[1]["derived"] \
+        .replace("warm_speedup=492.2x", "warm_speedup=6.0x")
+
+    checks = [
+        ("clean run passes", compare(clean, baseline).ok, True),
+        ("injected speed regression fails",
+         compare(speed_regressed, baseline).ok, False),
+        ("injected correctness flip fails",
+         compare(correctness_broken, baseline).ok, False),
+        ("warm-hit floor violation fails",
+         compare(floor_broken, baseline).ok, False),
+    ]
+    bad = [label for label, got, want in checks if got != want]
+    for label, got, want in checks:
+        mark = "ok" if got == want else "BROKEN"
+        print(f"self-test: {label}: {mark}")
+    if bad:
+        print(f"self-test FAILED: gate misbehaved on: {bad}")
+        return 1
+    print("self-test passed: gate flags injected regressions and passes clean runs")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="?", help="JSON rows from the current run")
+    ap.add_argument("baseline", nargs="?", help="committed BENCH_BASELINE.json")
+    ap.add_argument("--ratio-tol", type=float, default=0.25)
+    ap.add_argument("--wall-tol", type=float, default=0.25)
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate flags injected regressions")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test()
+    if not (args.current and args.baseline):
+        ap.error("need CURRENT and BASELINE row files (or --self-test)")
+
+    report = compare(_load(args.current), _load(args.baseline),
+                     ratio_tol=args.ratio_tol, wall_tol=args.wall_tol)
+    for w in report.warnings:
+        print(f"WARN: {w}")
+    for f in report.failures:
+        print(f"FAIL: {f}")
+    if report.ok:
+        print("bench gate: OK "
+              f"({len(report.warnings)} warning(s), 0 failures)")
+        return 0
+    print(f"bench gate: FAILED ({len(report.failures)} failure(s))")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

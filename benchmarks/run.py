@@ -11,9 +11,17 @@ Prints ``name,us_per_call,derived`` CSV rows (assignment deliverable (d)).
   roofline           — deliverable (g): per-cell terms from dry-run artifacts
   kernels            — Pallas kernels vs refs (correctness + ref wall time)
   train_step         — tiny end-to-end train step wall time
+  topology_query     — cold discovery vs warm store hit vs batched queries
+
+CLI (the CI bench-regression gate consumes the machine-readable form):
+
+  --json             emit rows as a JSON array on stdout instead of CSV
+  --out FILE         also write the JSON rows to FILE
+  --only a,b,c       run only the named benchmarks (function-name suffixes)
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -24,11 +32,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
 ROWS: list[tuple[str, float, str]] = []
+JSON_MODE = False
 
 
 def row(name: str, us: float, derived: str) -> None:
     ROWS.append((name, us, derived))
-    print(f"{name},{us:.1f},{derived}", flush=True)
+    if not JSON_MODE:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def rows_as_json() -> list[dict]:
+    return [{"name": n, "us": round(u, 1), "derived": d} for n, u, d in ROWS]
 
 
 def _timed(fn, *args, repeats=3, **kw):
@@ -203,6 +217,47 @@ def bench_link_adjacency() -> None:
         f"{correct}/{pod.n_chips}_chips_exact_thr={res.threshold_us:.2f}us")
 
 
+def bench_topology_query() -> None:
+    """The serving story: cold discovery vs warm store hit vs batched query
+    throughput over the topology service (ISSUE 2 tentpole headline: a warm
+    hit must be >=10x faster than cold discovery — re-serving a stored
+    topology is a pure read, not a re-measurement)."""
+    import tempfile
+
+    from repro.core import discover_sim, make_h100_like, make_mi210_like
+    from repro.core.engine.store import TopologyStore
+    from repro.serve.topology_service import TopologyService
+
+    with tempfile.TemporaryDirectory() as td:
+        store = TopologyStore(td)
+        t0 = time.perf_counter()
+        topo_cold, _ = discover_sim(make_h100_like(seed=49), n_samples=17,
+                                    store=store)
+        cold_s = time.perf_counter() - t0
+        warm_s = np.inf
+        for _ in range(5):
+            t0 = time.perf_counter()
+            topo_warm, _ = discover_sim(make_h100_like(seed=49), n_samples=17,
+                                        store=store)
+            warm_s = min(warm_s, time.perf_counter() - t0)
+        identical = topo_cold.to_json() == topo_warm.to_json()
+
+        discover_sim(make_mi210_like(seed=49), n_samples=17, store=store)
+        svc = TopologyService(store, hot_set=8)
+        paths = ("L1.size", "L2.load_latency", "hbm.bandwidth",
+                 "DeviceMemory.read_bw", "L2.segment_size")
+        reqs = [(k, p) for k in store.keys() for p in paths] * 200
+        svc.query_batch(reqs[:10])       # warm the hot set
+        t0 = time.perf_counter()
+        answers = svc.query_batch(reqs)
+        q_s = time.perf_counter() - t0
+        found = sum(a.found for a in answers)
+        row("topology_query", warm_s * 1e6,
+            f"cold={cold_s*1e6:.0f}us_warm_speedup={cold_s/warm_s:.1f}x_"
+            f"batched_qps={len(reqs)/q_s:.0f}_found={found}/{len(reqs)}_"
+            f"identical={identical}")
+
+
 # ------------------------------------------------------------- framework
 def bench_roofline() -> None:
     """Roofline terms per (arch x shape) from the dry-run artifacts."""
@@ -268,16 +323,52 @@ def bench_train_step() -> None:
     row("train_step_smoke", us, f"loss={float(m['loss']):.3f}")
 
 
-def main() -> None:
-    for fn in (bench_table1_coverage, bench_table3_validation,
+ALL_BENCHES = (bench_table1_coverage, bench_table3_validation,
                bench_fig2_reduction, bench_runtime_breakdown,
-               bench_engine_speedup, bench_fig5_stream, bench_perfmodel,
-               bench_link_adjacency, bench_roofline, bench_kernels,
-               bench_train_step):
+               bench_engine_speedup, bench_topology_query, bench_fig5_stream,
+               bench_perfmodel, bench_link_adjacency, bench_roofline,
+               bench_kernels, bench_train_step)
+
+
+def main(argv: list[str] | None = None) -> None:
+    global JSON_MODE
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON array of rows on stdout instead of CSV")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON rows to this file")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names "
+                         "(e.g. engine_speedup,topology_query)")
+    args = ap.parse_args(argv)
+    JSON_MODE = args.json
+
+    benches = ALL_BENCHES
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",") if w.strip()}
+        benches = [fn for fn in ALL_BENCHES
+                   if fn.__name__.removeprefix("bench_") in wanted]
+        missing = wanted - {fn.__name__.removeprefix("bench_")
+                            for fn in benches}
+        if missing:
+            ap.error(f"unknown benchmarks: {sorted(missing)}")
+
+    for fn in benches:
         try:
             fn()
         except Exception as e:  # noqa: BLE001
-            row(fn.__name__, 0.0, f"ERROR_{type(e).__name__}_{e}")
+            # Same name a successful row would use, so the CI gate can match
+            # a crashed gated bench and surface the exception in its report.
+            row(fn.__name__.removeprefix("bench_"), 0.0,
+                f"ERROR_{type(e).__name__}_{e}")
+
+    if args.json:
+        print(json.dumps(rows_as_json(), indent=2), flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows_as_json(), f, indent=2)
 
 
 if __name__ == "__main__":

@@ -2,9 +2,13 @@
 
     PYTHONPATH=src python examples/discover_topology.py --device sim-h100 -j out.json
     PYTHONPATH=src python examples/discover_topology.py --device host --quick
+    PYTHONPATH=src python examples/discover_topology.py --device sim-h100 \
+        --store /tmp/topo-store        # second run: pure store hit, 0 probes
 
 Mirrors the paper's tool surface: full-suite by default, JSON to stdout,
-optional markdown report, per-family timing like §V-A.
+optional markdown report, per-family timing like §V-A.  ``--store DIR``
+makes discovery read-/write-through the persistent topology store
+(``--refresh`` forces a re-measure that still writes through).
 """
 import argparse
 import sys
@@ -22,16 +26,30 @@ def main() -> None:
     ap.add_argument("--elements", nargs="*", default=None,
                     help="restrict to these memory elements (like mt4g CLI)")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent topology store directory "
+                         "(read-through/write-through)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="with --store: re-measure even on a stored hit")
     ap.add_argument("-j", "--json-out", default=None)
     ap.add_argument("-p", "--markdown", action="store_true")
     args = ap.parse_args()
 
+    store = None
+    if args.store:
+        from repro.core.engine.store import TopologyStore
+        store = TopologyStore(args.store)
+
     if args.device == "host":
-        topo, timings = discover_host(quick=args.quick)
+        topo, timings = discover_host(quick=args.quick, store=store,
+                                      refresh=args.refresh)
     else:
         dev = SIM_DEVICES[args.device](seed=0)
         topo, timings = discover_sim(dev, n_samples=args.samples,
-                                     elements=args.elements)
+                                     elements=args.elements, store=store,
+                                     refresh=args.refresh)
+    if store is not None:
+        print(f"# store: {store.stats()}", file=sys.stderr)
 
     if args.markdown:
         print(topo.to_markdown())

@@ -12,7 +12,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-__all__ = ["HardwareSpec", "TPU_V5E", "TPU_V4", "HOST_CPU", "get_spec", "CATALOG"]
+__all__ = ["HardwareSpec", "TPU_V5E", "TPU_V4", "HOST_CPU", "get_spec",
+           "spec_from_store", "CATALOG"]
 
 
 @dataclass(frozen=True)
@@ -81,8 +82,38 @@ CATALOG: dict[str, HardwareSpec] = {
 }
 
 
-def get_spec(name: str) -> HardwareSpec:
+def get_spec(name: str, store=None) -> HardwareSpec:
+    """Resolve a hardware spec, preferring *discovered* values.
+
+    With a ``TopologyStore``, a stored discovered topology for ``name``
+    (matched on model or spec name, newest first) overlays its measured
+    values onto the static record — the paper's substitution of benchmarks
+    for datasheets, made durable.  Without a store (or a stored entry) the
+    static datasheet record answers as before.
+    """
+    if store is not None:
+        spec = spec_from_store(name, store)
+        if spec is not None:
+            return spec
     try:
         return CATALOG[name]
     except KeyError as e:
         raise KeyError(f"unknown hardware '{name}'; known: {sorted(CATALOG)}") from e
+
+
+def spec_from_store(name: str, store) -> HardwareSpec | None:
+    """Newest stored discovered topology for ``name`` overlaid onto the
+    static base record (``HOST_CPU`` when the name has no datasheet entry)."""
+    from .discover import spec_from_topology  # late: discover imports catalog
+
+    entries = store.find(model=name)
+    if not entries:
+        return None
+    base = CATALOG.get(name, HOST_CPU)
+    spec = spec_from_topology(entries[0].topology, base)
+    if spec is base:
+        return None                     # nothing measured worth overlaying
+    import dataclasses
+    return dataclasses.replace(spec, name=name,
+                               notes=f"{base.notes} [overlaid from discovered "
+                                     f"topology {entries[0].key}]".strip())

@@ -37,7 +37,8 @@ from .topology import (PROVENANCE_API, PROVENANCE_BENCHMARK, ComputeElement,
                        MemoryElement, Topology)
 
 __all__ = ["DiscoveryTimings", "discover_sim", "discover_sim_legacy",
-           "discover_host", "spec_from_topology"]
+           "discover_host", "spec_from_topology",
+           "sim_request_descriptor", "host_request_descriptor"]
 
 KIB = 1024
 
@@ -68,25 +69,94 @@ class _Timer:
 
 
 # --------------------------------------------------------------------------
+# Store read-through: request descriptors + hit/persist helpers
+# --------------------------------------------------------------------------
+def sim_request_descriptor(device, n_samples: int,
+                           elements: list[str] | None) -> dict:
+    """Everything that determines a ``discover_sim`` result — and nothing
+    that does not (worker count and engine-vs-legacy are bit-invisible)."""
+    return {
+        "kind": "discover_sim",
+        "backend": f"simulated:{device.name}",
+        "device": device.name,
+        "vendor": device.vendor,
+        "seed": device.seed,
+        "n_samples": int(n_samples),
+        "elements": sorted(elements) if elements else None,
+    }
+
+
+def _store_lookup(store, descriptor: dict):
+    """(key, stored-result-or-None): a hit reconstructs the timings the
+    original run recorded, so callers see the same (topo, timings) shape."""
+    from .engine.store import request_key
+
+    key = request_key(descriptor)
+    entry = store.get(key)
+    if entry is None:
+        return key, None
+    timings = DiscoveryTimings()
+    timings.per_family.update(entry.meta.get("timings", {}))
+    return key, (entry.topology, timings)
+
+
+def _store_persist(store, key: str, descriptor: dict, topo: Topology,
+                   timings: DiscoveryTimings, cache=None) -> None:
+    store.put(key, topo, meta={"request": descriptor,
+                               "timings": dict(timings.per_family)})
+    if cache is not None and len(cache):
+        store.put_samples(key, cache.snapshot())
+
+
+# --------------------------------------------------------------------------
 # Engine-based discovery (default path)
 # --------------------------------------------------------------------------
 def discover_sim(device, n_samples: int = 33,
                  elements: list[str] | None = None, *,
                  engine: bool = True, max_workers: int | None = None,
+                 store=None, refresh: bool = False,
                  ) -> tuple[Topology, DiscoveryTimings]:
     """Full MT4G-style discovery of a simulated device.
 
     ``engine=True`` (default) routes through the batched probe engine;
     ``engine=False`` runs the legacy sequential loop.  Both produce the same
     topology for a fixed device seed.
-    """
-    if not engine:
-        return discover_sim_legacy(device, n_samples, elements)
 
-    from .engine import run_probes
+    ``store`` (a ``TopologyStore``) makes discovery read-through/write-
+    through persistent: a stored result for the same content-addressed
+    request is returned without issuing a single runner probe, and a fresh
+    run persists both the topology and the engine's sample cache.
+    ``refresh=True`` skips the read (re-measures) but still writes through.
+    """
+    key = descriptor = None
+    if store is not None:
+        descriptor = sim_request_descriptor(device, n_samples, elements)
+        if not refresh:
+            key, hit = _store_lookup(store, descriptor)
+            if hit is not None:
+                return hit
+        else:
+            from .engine.store import request_key
+            key = request_key(descriptor)
+
+    if not engine:
+        topo, timings = discover_sim_legacy(device, n_samples, elements)
+        if store is not None:
+            _store_persist(store, key, descriptor, topo, timings)
+        return topo, timings
+
+    from .engine import SampleCache, run_probes
 
     runner = SimRunner(device)
     timings = DiscoveryTimings()
+    cache = SampleCache()
+    if store is not None and not refresh:
+        # Partial-recovery path: a quarantined topology with intact samples
+        # re-assembles from disk-served probe rows instead of re-measuring.
+        # Never under refresh=True — that contract is a real re-measure.
+        persisted = store.load_samples(key)
+        if persisted:
+            cache.preload(persisted)
 
     device_families = ["sharing", "device_memory_latency",
                        "device_memory_bandwidth"]
@@ -95,7 +165,7 @@ def discover_sim(device, n_samples: int = 33,
 
     eng = run_probes(runner, n_samples=n_samples, elements=elements,
                      device_families=tuple(device_families),
-                     max_workers=max_workers, timings=timings)
+                     max_workers=max_workers, timings=timings, cache=cache)
 
     topo = Topology(vendor=device.vendor, model=device.name,
                     backend=f"simulated:{device.name}")
@@ -193,6 +263,8 @@ def discover_sim(device, n_samples: int = 33,
         f"per-family cpu { {k: round(v, 2) for k, v in timings.per_family.items()} }; "
         f"cache {eng.cache_stats['hits']} hits / "
         f"{eng.cache_stats['misses']} misses)")
+    if store is not None:
+        _store_persist(store, key, descriptor, topo, timings, cache=cache)
     return topo, timings
 
 
@@ -347,17 +419,39 @@ def discover_sim_legacy(device, n_samples: int = 33,
     return topo, timings
 
 
+def host_request_descriptor(max_bytes: int, n_samples: int,
+                            quick: bool) -> dict:
+    return {"kind": "discover_host", "max_bytes": int(max_bytes),
+            "n_samples": int(n_samples), "quick": bool(quick)}
+
+
 def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
-                  quick: bool = True) -> tuple[Topology, DiscoveryTimings]:
+                  quick: bool = True, *, store=None, refresh: bool = False,
+                  ) -> tuple[Topology, DiscoveryTimings]:
     """Live discovery of this machine's CPU hierarchy (real measurements).
 
     A thin driver over the engine scheduler: the host hierarchy has one
     probeable space, so the work-item DAG is small (size ∥ latencies ∥
     bandwidths, all independent on real hardware) — but it shares the same
     scheduling, caching, and timing machinery as the simulated path.
+
+    ``store`` works as in ``discover_sim`` — host measurements are slow and
+    real, so serving a prior run of the same request from the store is the
+    common production path; ``refresh=True`` forces a re-measure.
     """
     from .engine import WorkItem, run_work_items
     from .engine.cache import CachingRunner
+
+    key = descriptor = None
+    if store is not None:
+        descriptor = host_request_descriptor(max_bytes, n_samples, quick)
+        if not refresh:
+            key, hit = _store_lookup(store, descriptor)
+            if hit is not None:
+                return hit
+        else:
+            from .engine.store import request_key
+            key = request_key(descriptor)
 
     runner = CachingRunner(
         HostRunner(max_bytes=max_bytes, iters=1 << 14 if quick else 1 << 16))
@@ -404,6 +498,9 @@ def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
     topo.memory.append(dram)
     topo.notes.append("host runner: per-sample = mean ns/load of a jitted "
                       "dependent chase (DESIGN.md adaptation note 1)")
+    if store is not None:
+        _store_persist(store, key, descriptor, topo, timings,
+                       cache=runner.cache)
     return topo, timings
 
 

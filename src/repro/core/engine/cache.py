@@ -60,6 +60,22 @@ class SampleCache:
             return {"hits": self.hits, "misses": self.misses,
                     "entries": len(self._store)}
 
+    # --------------------------------------------------------- persistence
+    def snapshot(self) -> dict[tuple, np.ndarray]:
+        """Copy of all entries (for ``TopologyStore.put_samples``)."""
+        with self._lock:
+            return dict(self._store)
+
+    def preload(self, entries: dict) -> None:
+        """Seed the cache from persisted entries (``load_samples``).
+
+        Preloaded rows count as neither hits nor misses at load time; the
+        probes that later read them register as ordinary hits.
+        """
+        with self._lock:
+            for k, v in entries.items():
+                self._store.setdefault(tuple(k), np.asarray(v))
+
 
 class CachingRunner:
     """ProbeRunner adapter that memoizes every sample request.
@@ -108,6 +124,36 @@ class CachingRunner:
         return self.cache.get_or_run(
             key, lambda: self.base.cold_chase(space, array_bytes, stride,
                                               n_samples))
+
+    def cold_chase_batch(self, space, array_bytes_list, stride_list,
+                         n_samples):
+        """Cold-pass sweep rows: cached rows served, the rest in ONE base
+        call.  Unlike ``pchase_batch`` the stride varies per row (the §IV-D
+        granularity sweep grows both the stride and the array)."""
+        sizes = [int(ab) for ab in array_bytes_list]
+        strides = [int(s) for s in stride_list]
+        keys = [("cold", space, ab, s, int(n_samples))
+                for ab, s in zip(sizes, strides)]
+        rows: list[np.ndarray | None] = [self.cache.peek(k) for k in keys]
+        missing = [i for i, r in enumerate(rows) if r is None]
+        if missing:
+            if hasattr(self.base, "cold_chase_batch"):
+                fetched = np.asarray(self.base.cold_chase_batch(
+                    space, [sizes[i] for i in missing],
+                    [strides[i] for i in missing], n_samples))
+            else:
+                fetched = np.stack([self.base.cold_chase(
+                    space, sizes[i], strides[i], n_samples)
+                    for i in missing])
+            with self.cache._lock:
+                for j, i in enumerate(missing):
+                    self.cache.misses += 1
+                    self.cache._store[keys[i]] = fetched[j]
+                    rows[i] = fetched[j]
+        if len(missing) < len(rows):
+            with self.cache._lock:
+                self.cache.hits += len(rows) - len(missing)
+        return np.stack(rows)
 
     def amount_probe(self, space, core_a, core_b, array_bytes, n_samples):
         key = ("amount", space, int(core_a), int(core_b), int(array_bytes),

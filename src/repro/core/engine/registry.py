@@ -69,7 +69,7 @@ def _run_size(ctx: ProbeContext):
 
 def _run_fetch_granularity(ctx: ProbeContext):
     return find_fetch_granularity(ctx.runner, ctx.info.name,
-                                  n_samples=ctx.n_samples)
+                                  n_samples=ctx.n_samples, batched=True)
 
 
 def _fetch_of(results: dict) -> int:

@@ -1,0 +1,250 @@
+"""Persistent, content-addressed topology store (the serving back end).
+
+Discovery results become durable artifacts here: a finished ``Topology``
+(plus request metadata and per-family timings) and the engine's
+``SampleCache`` entries are persisted on disk, keyed by a hash of the
+*discovery request* — the same signature the engine already uses to key
+sample streams (``simulate._KeyedSampler``).  Because simulated runners draw
+request-keyed samples, a stored topology is byte-for-byte what re-running
+the request would produce, so repeated discovery of a known device is a pure
+cache hit: ``discover_sim(store=...)`` returns the stored topology without
+touching the runner at all.
+
+Layout under the store root::
+
+    topologies/<key>.json   # {"meta": {...}, "topology": Topology.to_json()}
+    samples/<key>.npz       # SampleCache entries (manifest + row arrays)
+    corrupt/                # quarantined unreadable files (recovery path)
+
+Writes are atomic (temp file + ``os.replace``); reads that hit corrupted
+files quarantine them into ``corrupt/`` and report a miss, so a damaged
+store degrades to re-discovery instead of failing the request.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import time
+import zipfile
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..topology import Topology
+
+__all__ = ["TopologyStore", "StoredTopology", "request_key"]
+
+SCHEMA_VERSION = 1
+
+
+def request_key(descriptor: dict) -> str:
+    """Content address of a discovery request.
+
+    The descriptor must contain everything that determines the result
+    (device identity + seed, sample count, element restriction) and nothing
+    that does not (worker counts, engine vs legacy — both produce
+    bit-identical topologies).  The store's schema version is folded in
+    here, so a schema bump invalidates every old key instead of serving
+    old-layout documents.
+    """
+    blob = json.dumps({"_schema": SCHEMA_VERSION, **descriptor},
+                      sort_keys=True, separators=(",", ":"),
+                      default=str).encode()
+    return hashlib.blake2b(blob, digest_size=16).hexdigest()
+
+
+@dataclass
+class StoredTopology:
+    """One store entry: the topology plus its request/provenance metadata."""
+
+    key: str
+    topology: Topology
+    meta: dict = field(default_factory=dict)
+
+
+class TopologyStore:
+    """Content-addressed on-disk store for discovered topologies + samples."""
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        self._topo_dir = os.path.join(self.root, "topologies")
+        self._samples_dir = os.path.join(self.root, "samples")
+        self._corrupt_dir = os.path.join(self.root, "corrupt")
+        for d in (self._topo_dir, self._samples_dir):
+            os.makedirs(d, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.corrupt = 0
+
+    # ------------------------------------------------------------- paths
+    def _topo_path(self, key: str) -> str:
+        return os.path.join(self._topo_dir, f"{key}.json")
+
+    def _samples_path(self, key: str) -> str:
+        return os.path.join(self._samples_dir, f"{key}.npz")
+
+    @staticmethod
+    def _atomic_write(path: str, data: bytes) -> None:
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+
+    def _quarantine(self, path: str) -> None:
+        """Move an unreadable file aside so the key reads as a miss."""
+        os.makedirs(self._corrupt_dir, exist_ok=True)
+        dest = os.path.join(self._corrupt_dir,
+                            f"{os.path.basename(path)}.{int(time.time())}")
+        try:
+            os.replace(path, dest)
+        except OSError:
+            pass
+        self.corrupt += 1
+
+    # --------------------------------------------------------- topologies
+    def put(self, key: str, topo: Topology, meta: dict | None = None) -> str:
+        """Persist a topology under ``key``; returns the key.
+
+        ``meta`` is merged over the defaults derived from the topology
+        (model/vendor/backend identity, creation time, schema version) —
+        the query service filters and ranks entries on these fields.
+        """
+        doc_meta = {
+            "schema": SCHEMA_VERSION,
+            "model": topo.model,
+            "vendor": topo.vendor,
+            "backend": topo.backend,
+            "created_at": time.time(),
+        }
+        if meta:
+            doc_meta.update(meta)
+        doc = {"meta": doc_meta, "topology": topo.to_json()}
+        self._atomic_write(self._topo_path(key),
+                           json.dumps(doc, sort_keys=True).encode())
+        return key
+
+    def _read_doc(self, key: str) -> dict | None:
+        """Raw store document, quarantining unreadable files; no counters."""
+        path = self._topo_path(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                doc = json.loads(f.read())
+            if not isinstance(doc, dict) or "topology" not in doc:
+                raise KeyError("topology")
+            return doc
+        except (json.JSONDecodeError, KeyError, TypeError, UnicodeDecodeError,
+                OSError):
+            self._quarantine(path)
+            return None
+
+    def get(self, key: str) -> StoredTopology | None:
+        """Load a stored topology; corrupted entries quarantine + miss.
+
+        The hit/miss counters track this key-addressed serving path only —
+        meta scans (``index``/``find``) do not inflate them.
+        """
+        doc = self._read_doc(key)
+        if doc is not None:
+            try:
+                topo = Topology.from_json(doc["topology"])
+            except (KeyError, TypeError, AttributeError):
+                self._quarantine(self._topo_path(key))
+                doc = None
+        if doc is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return StoredTopology(key=key, topology=topo, meta=doc.get("meta", {}))
+
+    def has(self, key: str) -> bool:
+        return os.path.exists(self._topo_path(key))
+
+    def delete(self, key: str) -> None:
+        for path in (self._topo_path(key), self._samples_path(key)):
+            try:
+                os.remove(path)
+            except FileNotFoundError:
+                pass
+
+    def keys(self) -> list[str]:
+        return sorted(os.path.splitext(f)[0]
+                      for f in os.listdir(self._topo_dir)
+                      if f.endswith(".json"))
+
+    def index(self) -> list[tuple[str, dict]]:
+        """``(key, meta)`` for every readable entry — a meta-only scan that
+        skips topology deserialization and leaves the serving counters
+        untouched (corrupted files still quarantine)."""
+        out = []
+        for key in self.keys():
+            doc = self._read_doc(key)
+            if doc is not None:
+                out.append((key, doc.get("meta", {})))
+        return out
+
+    def entries(self) -> list[StoredTopology]:
+        """All readable entries (corrupted files are quarantined, not raised)."""
+        out = []
+        for key in self.keys():
+            entry = self.get(key)
+            if entry is not None:
+                out.append(entry)
+        return out
+
+    def find(self, *, model: str | None = None, vendor: str | None = None,
+             backend: str | None = None) -> list[StoredTopology]:
+        """Entries matching the given identity fields, newest first.
+
+        Filters on the meta index, then loads only the matching topologies.
+        """
+        matches = [(key, meta) for key, meta in self.index()
+                   if (model is None or meta.get("model") == model)
+                   and (vendor is None or meta.get("vendor") == vendor)
+                   and (backend is None or meta.get("backend") == backend)]
+        matches.sort(key=lambda km: km[1].get("created_at", 0.0), reverse=True)
+        out = []
+        for key, _meta in matches:
+            entry = self.get(key)
+            if entry is not None:
+                out.append(entry)
+        return out
+
+    # ------------------------------------------------------------ samples
+    def put_samples(self, key: str, entries: dict) -> None:
+        """Persist ``SampleCache`` entries: tuple keys -> sample arrays.
+
+        Keys are flat tuples of str/int (the runner request signatures);
+        they serialize through a JSON manifest, arrays positionally.
+        """
+        manifest = []
+        arrays = {}
+        for i, (k, arr) in enumerate(entries.items()):
+            manifest.append(list(k))
+            arrays[f"a{i}"] = np.asarray(arr)
+        buf = io.BytesIO()
+        np.savez_compressed(buf, manifest=json.dumps(manifest), **arrays)
+        self._atomic_write(self._samples_path(key), buf.getvalue())
+
+    def load_samples(self, key: str) -> dict | None:
+        """Load persisted sample entries; corrupted archives miss (+quarantine)."""
+        path = self._samples_path(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            with np.load(path, allow_pickle=False) as data:
+                manifest = json.loads(str(data["manifest"]))
+                return {tuple(k): data[f"a{i}"]
+                        for i, k in enumerate(manifest)}
+        except (ValueError, KeyError, OSError, json.JSONDecodeError,
+                zipfile.BadZipFile):
+            self._quarantine(path)
+            return None
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "corrupt": self.corrupt, "entries": len(self.keys())}

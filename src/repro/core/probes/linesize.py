@@ -51,6 +51,7 @@ def find_fetch_granularity(
     n_samples: int = 65,
     stride_step: int = 4,
     confirm: int = 2,
+    batched: bool = False,
 ) -> GranularityResult:
     """Paper §IV-D: grow the stride by 4 B until only misses remain.
 
@@ -59,6 +60,13 @@ def find_fetch_granularity(
     "mixed" while any statistically meaningful hit fraction remains. The
     granularity is the first stride with ``confirm`` all-miss successors —
     single-stride flukes at low sample counts must not end the search early.
+
+    ``batched=True`` (probe-engine path) issues the sweep in
+    ``cold_chase_batch`` chunks — both array size and stride vary per row,
+    which is why this needed its own runner API next to ``pchase_batch``.
+    The sequential early-stop is replayed on the classified chunk, so the
+    returned result is bit-identical (request-keyed streams make the at most
+    one chunk of extra probes side-effect free).
     """
     # References: a warm chase that surely hits, and a cold chase whose
     # stride is far beyond any plausible granularity (every load misses).
@@ -76,19 +84,30 @@ def find_fetch_granularity(
     # produce only ~1.6% hits at the last mixed stride).
     n_loads = 16 * n_samples
     min_frac = max(0.005, 2.0 / n_loads)
+
+    def rows_for(part: np.ndarray) -> np.ndarray:
+        arrs = [max(array_bytes, int(s) * (n_loads + 1)) for s in part]
+        if batched:
+            return np.asarray(runner.cold_chase_batch(
+                space, arrs, [int(s) for s in part], n_loads))
+        return np.stack([runner.cold_chase(space, arrs[j], int(s), n_loads)
+                         for j, s in enumerate(part)])
+
+    chunk = 16 if batched else 1
     candidate_i = -1
-    for i, s in enumerate(strides):
-        arr = max(array_bytes, int(s) * (n_loads + 1))
-        cur = runner.cold_chase(space, arr, int(s), n_loads)
-        hit_frac = float(np.mean(cur < thresh))
-        mixed[i] = hit_frac > min_frac
-        if not mixed[i] and candidate_i < 0:
-            candidate_i = i
-        elif mixed[i]:
-            candidate_i = -1  # fluke: hits reappeared, keep searching
-        if candidate_i >= 0 and i - candidate_i >= confirm:
-            g = int(strides[candidate_i])
-            return GranularityResult(g, True, strides[: i + 1], mixed[: i + 1])
+    for lo in range(0, strides.size, chunk):
+        part = strides[lo: lo + chunk]
+        hit_fracs = np.mean(rows_for(part) < thresh, axis=1)
+        for i in range(lo, lo + part.size):
+            mixed[i] = float(hit_fracs[i - lo]) > min_frac
+            if not mixed[i] and candidate_i < 0:
+                candidate_i = i
+            elif mixed[i]:
+                candidate_i = -1  # fluke: hits reappeared, keep searching
+            if candidate_i >= 0 and i - candidate_i >= confirm:
+                g = int(strides[candidate_i])
+                return GranularityResult(g, True, strides[: i + 1],
+                                         mixed[: i + 1])
     if candidate_i >= 0:
         return GranularityResult(int(strides[candidate_i]), True, strides, mixed)
     return GranularityResult(-1, False, strides, mixed)

@@ -53,6 +53,9 @@ class ProbeRunner(Protocol):
     def cold_chase(self, space: str, array_bytes: int, stride: int,
                    n_samples: int) -> np.ndarray: ...
 
+    def cold_chase_batch(self, space: str, array_bytes_list, stride_list,
+                         n_samples: int) -> np.ndarray: ...
+
     def amount_probe(self, space: str, core_a: int, core_b: int,
                      array_bytes: int, n_samples: int) -> np.ndarray: ...
 
@@ -103,6 +106,12 @@ class SimRunner:
 
     def cold_chase(self, space, array_bytes, stride, n_samples):
         return self.device.cold_chase(space, array_bytes, stride, n_samples)
+
+    def cold_chase_batch(self, space, array_bytes_list, stride_list,
+                         n_samples):
+        """One vectorized call for a whole granularity stride sweep."""
+        return self.device.cold_chase_batch(space, array_bytes_list,
+                                            stride_list, n_samples)
 
     def amount_probe(self, space, core_a, core_b, array_bytes, n_samples):
         return self.device.amount_probe(space, core_a, core_b, array_bytes, n_samples)
@@ -216,6 +225,10 @@ class HostRunner:
         return np.stack(rows)
 
     def cold_chase(self, space, array_bytes, stride, n_samples):
+        raise NotImplementedError("host runner has no cold-pass control")
+
+    def cold_chase_batch(self, space, array_bytes_list, stride_list,
+                         n_samples):
         raise NotImplementedError("host runner has no cold-pass control")
 
     def amount_probe(self, *a, **k):

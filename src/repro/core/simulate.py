@@ -232,6 +232,20 @@ class SimDevice:
                         self._lat(lvl.latency, lvl.noise, idx.size, key + ("h",)))
         return lats
 
+    def cold_chase_batch(self, space: str, array_bytes_list, stride_list,
+                         n_samples: int) -> np.ndarray:
+        """One call for a whole §IV-D stride sweep (engine fast path).
+
+        Unlike ``pchase_batch`` both the array size AND the stride vary per
+        row.  Row i is bit-identical to
+        ``cold_chase(space, array_bytes_list[i], stride_list[i], n_samples)``
+        — request-keyed streams — so batching only removes the per-stride
+        dispatch overhead of the granularity sweep's sequential calls.
+        """
+        return np.stack([
+            self.cold_chase(space, int(ab), int(s), int(n_samples))
+            for ab, s in zip(array_bytes_list, stride_list)])
+
     def _next_latency(self, lvl: SimLevel) -> float:
         chain = self._chain(lvl.name)
         return chain[1].latency if len(chain) > 1 else self.mem_latency

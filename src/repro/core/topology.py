@@ -26,6 +26,20 @@ PROVENANCE_BENCHMARK = "benchmark"
 PROVENANCE_CATALOG = "catalog"
 
 
+def _plain(value: Any) -> Any:
+    """Canonicalize a value for JSON: numpy scalars/arrays -> native types,
+    tuples -> lists, recursively.  Serialization must round-trip bit-equal
+    (the topology store keys on it), so everything that reaches disk goes
+    through here."""
+    if isinstance(value, (list, tuple)):
+        return [_plain(v) for v in value]
+    if hasattr(value, "tolist"):           # numpy array
+        return _plain(value.tolist())
+    if hasattr(value, "item"):             # numpy scalar
+        return value.item()
+    return value
+
+
 @dataclass
 class Attribute:
     """One measured/reported attribute with provenance + confidence."""
@@ -36,9 +50,12 @@ class Attribute:
     confidence: float | None = None  # None for API/catalog values
 
     def to_json(self) -> dict:
-        d = {"value": self.value, "unit": self.unit, "provenance": self.provenance}
+        d = {"value": _plain(self.value), "unit": self.unit,
+             "provenance": self.provenance}
         if self.confidence is not None:
-            d["confidence"] = round(float(self.confidence), 4)
+            # Full precision: the store's round-trip guarantee is bit-equal,
+            # including confidence (display rounding happens in to_markdown).
+            d["confidence"] = float(self.confidence)
         return d
 
     @classmethod

@@ -1,3 +1,6 @@
 from .engine import Engine, ServeConfig
+from .topology_service import (AttrDelta, QueryResult, TopologyDiff,
+                               TopologyService)
 
-__all__ = ["Engine", "ServeConfig"]
+__all__ = ["Engine", "ServeConfig",
+           "AttrDelta", "QueryResult", "TopologyDiff", "TopologyService"]

@@ -1,0 +1,157 @@
+"""Bench-regression-gate tests: derived-field parsing, the compare rules
+(hard-fail correctness + ratio regressions, warn-only wall time), and the
+CLI contract CI relies on — nonzero exit on an injected regression."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+
+from check_regression import (GateReport, as_number, compare,  # noqa: E402
+                              parse_derived)
+
+BASELINE = [
+    {"name": "engine_speedup", "us": 240000.0,
+     "derived": "legacy=530000us_speedup=2.20x_identical=True"},
+    {"name": "topology_query", "us": 600.0,
+     "derived": "cold=320000us_warm_speedup=500.0x_batched_qps=170000_"
+                "found=2000/2000_identical=True"},
+]
+
+
+def _rows(**overrides):
+    rows = json.loads(json.dumps(BASELINE))
+    for name, derived in overrides.items():
+        for r in rows:
+            if r["name"] == name:
+                r["derived"] = derived
+    return rows
+
+
+class TestParsing:
+    def test_underscored_metric_names(self):
+        d = parse_derived("cold=320000us_warm_speedup=500.0x_batched_qps="
+                          "170000_found=2000/2000_identical=True")
+        assert d == {"cold": "320000us", "warm_speedup": "500.0x",
+                     "batched_qps": "170000", "found": "2000/2000",
+                     "identical": "True"}
+
+    def test_free_text_rows_do_not_crash(self):
+        assert parse_derived("25/25_attrs") == {}
+        d = parse_derived("size=238B_conf=0.95_pts=40")
+        assert d["size"] == "238B"
+
+    def test_as_number(self):
+        assert as_number("2.23x") == pytest.approx(2.23)
+        assert as_number("538529us") == pytest.approx(538529.0)
+        assert as_number("2000/2000") == pytest.approx(1.0)
+        assert as_number("1900/2000") == pytest.approx(0.95)
+        assert as_number("True") is None
+
+
+class TestCompareRules:
+    def test_clean_run_passes(self):
+        assert compare(_rows(), BASELINE).ok
+
+    def test_ratio_regression_fails(self):
+        report = compare(_rows(
+            engine_speedup="legacy=530000us_speedup=1.40x_identical=True"),
+            BASELINE)
+        assert not report.ok
+        assert any("speedup regressed" in f for f in report.failures)
+
+    def test_small_ratio_drift_passes(self):
+        assert compare(_rows(
+            engine_speedup="legacy=530000us_speedup=1.90x_identical=True"),
+            BASELINE).ok
+
+    def test_correctness_flip_fails(self):
+        report = compare(_rows(
+            engine_speedup="legacy=530000us_speedup=2.20x_identical=False"),
+            BASELINE)
+        assert any("identical" in f for f in report.failures)
+
+    def test_found_fraction_drop_fails(self):
+        report = compare(_rows(
+            topology_query="cold=320000us_warm_speedup=500.0x_batched_qps="
+                           "170000_found=1500/2000_identical=True"),
+            BASELINE)
+        assert any("found dropped" in f for f in report.failures)
+
+    def test_warm_hit_floor(self):
+        report = compare(_rows(
+            topology_query="cold=320000us_warm_speedup=6.0x_batched_qps="
+                           "170000_found=2000/2000_identical=True"),
+            BASELINE)
+        assert any("below hard floor" in f for f in report.failures)
+
+    def test_wall_time_is_warn_only(self):
+        rows = _rows()
+        for r in rows:
+            r["us"] *= 10            # 10x slower wall clock
+        report = compare(rows, BASELINE)
+        assert report.ok
+        assert any("wall time" in w for w in report.warnings)
+
+    def test_qps_is_warn_only(self):
+        report = compare(_rows(
+            topology_query="cold=320000us_warm_speedup=500.0x_batched_qps="
+                           "50000_found=2000/2000_identical=True"),
+            BASELINE)
+        assert report.ok
+        assert any("batched_qps" in w for w in report.warnings)
+
+    def test_missing_gated_row_fails(self):
+        report = compare([_rows()[0]], BASELINE)
+        assert any("missing" in f for f in report.failures)
+
+    def test_errored_row_fails(self):
+        report = compare(_rows(
+            topology_query="ERROR_RuntimeError_boom"), BASELINE)
+        assert any("errored" in f for f in report.failures)
+
+
+@pytest.mark.slow
+class TestCli:
+    """The CI contract: exit 0 clean, nonzero on an injected regression."""
+
+    def _run(self, *args):
+        return subprocess.run(
+            [sys.executable, os.path.join(REPO, "benchmarks",
+                                          "check_regression.py"), *args],
+            capture_output=True, text=True)
+
+    def test_exits_nonzero_on_injected_regression(self, tmp_path):
+        base = tmp_path / "base.json"
+        cur = tmp_path / "cur.json"
+        base.write_text(json.dumps(BASELINE))
+        cur.write_text(json.dumps(_rows(
+            engine_speedup="legacy=530000us_speedup=1.10x_identical=True")))
+        proc = self._run(str(cur), str(base))
+        assert proc.returncode != 0
+        assert "FAIL" in proc.stdout
+
+    def test_exits_zero_on_clean_run(self, tmp_path):
+        base = tmp_path / "base.json"
+        base.write_text(json.dumps(BASELINE))
+        proc = self._run(str(base), str(base))
+        assert proc.returncode == 0
+        assert "OK" in proc.stdout
+
+    def test_self_test_passes(self):
+        proc = self._run("--self-test")
+        assert proc.returncode == 0
+        assert "self-test passed" in proc.stdout
+
+    def test_committed_baseline_is_well_formed(self):
+        with open(os.path.join(REPO, "BENCH_BASELINE.json")) as f:
+            rows = json.load(f)
+        names = {r["name"] for r in rows}
+        assert names >= {"engine_speedup", "topology_query"}
+        for r in rows:
+            d = parse_derived(r["derived"])
+            assert d.get("identical") == "True"

@@ -111,6 +111,41 @@ class TestBatchedRunner:
         for i, ab in enumerate(sizes):
             assert np.array_equal(batch[i], runner.pchase("L1", ab, 32, 17))
 
+    def test_cold_chase_batch_rows_match_individual_calls(self):
+        """The §IV-D sweep batch: per-row strides AND array sizes (unlike
+        ``pchase_batch``, which varies only the size)."""
+        runner = SimRunner(make_h100_like(seed=9))
+        strides = [4, 8, 32, 64, 128]
+        arrs = [max(64 * KIB, s * 65) for s in strides]
+        batch = runner.cold_chase_batch("L1", arrs, strides, 64)
+        for i, (ab, s) in enumerate(zip(arrs, strides)):
+            assert np.array_equal(batch[i],
+                                  runner.cold_chase("L1", ab, s, 64))
+
+    def test_cold_chase_batch_served_through_cache(self):
+        runner = CachingRunner(SimRunner(make_h100_like(seed=9)))
+        strides = [4, 8, 32]
+        arrs = [max(64 * KIB, s * 65) for s in strides]
+        one = runner.cold_chase("L1", arrs[1], strides[1], 64)
+        rows = runner.cold_chase_batch("L1", arrs, strides, 64)
+        assert runner.cache.hits >= 1              # middle row from cache
+        assert np.array_equal(rows[1], one)
+        again = runner.cold_chase_batch("L1", arrs, strides, 64)
+        assert np.array_equal(rows, again)
+
+    def test_fetch_granularity_batched_equals_sequential(self):
+        from repro.core.probes import find_fetch_granularity
+
+        for make, space in ((make_h100_like, "L1"), (make_mi210_like, "vL1")):
+            seq = find_fetch_granularity(SimRunner(make(seed=7)), space,
+                                         n_samples=17)
+            bat = find_fetch_granularity(
+                CachingRunner(SimRunner(make(seed=7))), space,
+                n_samples=17, batched=True)
+            assert (seq.granularity, seq.found) == (bat.granularity, bat.found)
+            assert np.array_equal(seq.strides, bat.strides)
+            assert np.array_equal(seq.mixed, bat.mixed)
+
     def test_vectorized_ks_scan_matches_sequential_scan(self):
         rng = np.random.default_rng(1)
         for trial in range(20):
