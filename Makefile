@@ -7,12 +7,14 @@
 #   make bench      — the benchmark harness (paper tables + engine_speedup)
 #   make bench-gate — the CI regression gate: gated bench rows vs the
 #                     committed BENCH_BASELINE.json budgets
+#   make discover-pallas — discovery through the real Pallas probe kernels
+#                     (interpret mode), report printed as markdown
 
 PY      ?= python
 PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-engine bench bench-gate
+.PHONY: test test-fast test-engine bench bench-gate discover-pallas
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -22,7 +24,8 @@ test-fast:
 
 test-engine:
 	$(ENV) $(PYTEST) -q tests/test_engine.py tests/test_probes.py \
-		tests/test_stats.py tests/test_discovery.py
+		tests/test_stats.py tests/test_discovery.py \
+		tests/test_runner_protocol.py
 
 bench:
 	$(ENV) $(PY) benchmarks/run.py
@@ -30,5 +33,9 @@ bench:
 bench-gate:
 	$(PY) benchmarks/check_regression.py --self-test
 	$(ENV) $(PY) benchmarks/run.py --json \
-		--only engine_speedup,topology_query --out bench_current.json
+		--only engine_speedup,topology_query,pallas_interp \
+		--out bench_current.json
 	$(PY) benchmarks/check_regression.py bench_current.json BENCH_BASELINE.json
+
+discover-pallas:
+	$(ENV) $(PY) examples/discover_topology.py --device pallas --markdown

@@ -41,6 +41,14 @@ GATES: dict[str, dict] = {
         "fractions": ("found",),
         "warn_metrics": ("batched_qps",),
     },
+    # Pallas-interpret backend: correctness hard-gated (discovered discrete
+    # attributes vs configured ground truth; store hit serving the identical
+    # document), wall time warn-only at first — interpret-mode kernel
+    # timings characterize the CI box, not the backend.
+    "pallas_interp": {
+        "bools": ("discrete_ok", "store_hit"),
+        "warn_metrics": ("warm_speedup",),
+    },
 }
 
 
@@ -178,6 +186,9 @@ def self_test() -> int:
         {"name": "topology_query", "us": 600.0,
          "derived": "cold=320000us_warm_speedup=500.0x_batched_qps=170000_"
                      "found=2000/2000_identical=True"},
+        {"name": "pallas_interp", "us": 20000000.0,
+         "derived": "discrete_ok=True_store_hit=True_warm_speedup=9000.0x_"
+                     "kernel_calls=4200"},
     ]
     clean = [
         {"name": "engine_speedup", "us": 250000.0,
@@ -185,6 +196,9 @@ def self_test() -> int:
         {"name": "topology_query", "us": 640.0,
          "derived": "cold=315000us_warm_speedup=492.2x_batched_qps=165000_"
                      "found=2000/2000_identical=True"},
+        {"name": "pallas_interp", "us": 24000000.0,   # slower wall: warn only
+         "derived": "discrete_ok=True_store_hit=True_warm_speedup=8421.7x_"
+                     "kernel_calls=4180"},
     ]
     speed_regressed = json.loads(json.dumps(clean))
     speed_regressed[0]["derived"] = \
@@ -195,6 +209,9 @@ def self_test() -> int:
     floor_broken = json.loads(json.dumps(clean))
     floor_broken[1]["derived"] = floor_broken[1]["derived"] \
         .replace("warm_speedup=492.2x", "warm_speedup=6.0x")
+    pallas_broken = json.loads(json.dumps(clean))
+    pallas_broken[2]["derived"] = pallas_broken[2]["derived"] \
+        .replace("discrete_ok=True", "discrete_ok=False")
 
     checks = [
         ("clean run passes", compare(clean, baseline).ok, True),
@@ -204,6 +221,8 @@ def self_test() -> int:
          compare(correctness_broken, baseline).ok, False),
         ("warm-hit floor violation fails",
          compare(floor_broken, baseline).ok, False),
+        ("pallas discrete-attribute drift fails",
+         compare(pallas_broken, baseline).ok, False),
     ]
     bad = [label for label, got, want in checks if got != want]
     for label, got, want in checks:

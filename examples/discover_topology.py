@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/discover_topology.py --device sim-h100 -j out.json
     PYTHONPATH=src python examples/discover_topology.py --device host --quick
+    PYTHONPATH=src python examples/discover_topology.py --device pallas -p
     PYTHONPATH=src python examples/discover_topology.py --device sim-h100 \
         --store /tmp/topo-store        # second run: pure store hit, 0 probes
 
@@ -15,13 +16,13 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import SIM_DEVICES, discover_host, discover_sim
+from repro.core import SIM_DEVICES, discover_host, discover_pallas, discover_sim
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--device", default="sim-h100",
-                    choices=sorted(SIM_DEVICES) + ["host"])
+                    choices=sorted(SIM_DEVICES) + ["host", "pallas"])
     ap.add_argument("--samples", type=int, default=17)
     ap.add_argument("--elements", nargs="*", default=None,
                     help="restrict to these memory elements (like mt4g CLI)")
@@ -43,6 +44,10 @@ def main() -> None:
     if args.device == "host":
         topo, timings = discover_host(quick=args.quick, store=store,
                                       refresh=args.refresh)
+    elif args.device == "pallas":
+        topo, timings = discover_pallas(n_samples=min(args.samples, 9),
+                                        elements=args.elements, store=store,
+                                        refresh=args.refresh)
     else:
         dev = SIM_DEVICES[args.device](seed=0)
         topo, timings = discover_sim(dev, n_samples=args.samples,

@@ -2,18 +2,21 @@
 memory topologies (MT4G), adapted TPU-native and consumed by the framework's
 distribution, roofline, and performance-model layers."""
 from .topology import (Attribute, ComputeElement, Link, MemoryElement,
-                       Topology)
+                       Topology, topology_equivalent)
 from .catalog import CATALOG, HOST_CPU, TPU_V4, TPU_V5E, HardwareSpec, get_spec
 from .simulate import (SIM_DEVICES, SimDevice, SimLevel, make_h100_like,
                        make_mi210_like, make_v5e_like)
-from .discover import (DiscoveryTimings, discover_host, discover_sim,
+from .discover import (DiscoveryRequest, DiscoveryTimings, discover,
+                       discover_host, discover_pallas, discover_sim,
                        discover_sim_legacy, spec_from_topology)
 
 __all__ = [
     "Attribute", "ComputeElement", "Link", "MemoryElement", "Topology",
+    "topology_equivalent",
     "CATALOG", "HOST_CPU", "TPU_V4", "TPU_V5E", "HardwareSpec", "get_spec",
     "SIM_DEVICES", "SimDevice", "SimLevel", "make_h100_like",
     "make_mi210_like", "make_v5e_like",
-    "DiscoveryTimings", "discover_host", "discover_sim",
-    "discover_sim_legacy", "spec_from_topology",
+    "DiscoveryRequest", "DiscoveryTimings", "discover", "discover_host",
+    "discover_pallas", "discover_sim", "discover_sim_legacy",
+    "spec_from_topology",
 ]

@@ -6,25 +6,36 @@ confidence annotations. Mirrors the MT4G CLI behavior: the whole suite by
 default, an optional restriction to specific memory elements, and timing of
 each benchmark family (paper §V-A reports per-family run times).
 
-Two execution paths produce identical topologies:
+The center of this module is the **unified, runner-agnostic driver**
+``discover(request)``: one implementation of request descriptors and
+content-addressed store read-/write-through, sample-cache preload, engine
+invocation, and topology assembly, shared by every backend.  The public
+entry points are thin wrappers that only say what is genuinely
+backend-specific:
 
-* the **probe engine** (default): the declarative registry in
-  ``core.engine`` expands into (space × family) work items that a
-  dependency-aware scheduler runs concurrently, with request-keyed sample
-  caching, batched p-chase sweeps, and vectorized K-S statistics;
-* the **legacy sequential loop** (``engine=False`` /
-  ``discover_sim_legacy``): one probe at a time, exactly as the paper's tool
-  runs them — kept as the reference implementation and as the baseline of
-  the ``engine_speedup`` benchmark.
+* ``discover_sim``    — a ``SimRunner`` over a virtual device with known
+  ground truth (the validation backend);
+* ``discover_host``   — real CPU measurements through a custom work-item
+  plan (the hierarchy has one probeable space, so it skips the registry);
+* ``discover_pallas`` — the ``PallasRunner``: real Pallas kernels
+  (``repro.kernels.pchase_probe``/``stream_probe``) in interpret mode,
+  timed end-to-end against a configured ground-truth hierarchy.
 
-Identity holds because simulated runners key every sample stream by the
-request itself (``simulate._KeyedSampler``): scheduling, batching, and
-caching change when samples are drawn, never what is drawn.
+A fourth path, ``discover_sim_legacy`` (also ``discover_sim(engine=False)``)
+keeps the paper-faithful sequential loop: one probe at a time, exactly as
+the paper's tool runs them — the reference implementation and the baseline
+of the ``engine_speedup`` benchmark.
+
+Engine and legacy results are identical for simulated devices because those
+runners key every sample stream by the request itself
+(``simulate._KeyedSampler``): scheduling, batching, and caching change when
+samples are drawn, never what is drawn.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Callable
 
 from .catalog import HardwareSpec
 from .probes.amount import align_segments, find_amount, find_cu_sharing, find_sharing
@@ -36,9 +47,11 @@ from .probes.size import find_size
 from .topology import (PROVENANCE_API, PROVENANCE_BENCHMARK, ComputeElement,
                        MemoryElement, Topology)
 
-__all__ = ["DiscoveryTimings", "discover_sim", "discover_sim_legacy",
-           "discover_host", "spec_from_topology",
-           "sim_request_descriptor", "host_request_descriptor"]
+__all__ = ["DiscoveryTimings", "DiscoveryRequest", "discover",
+           "discover_sim", "discover_sim_legacy", "discover_host",
+           "discover_pallas", "spec_from_topology",
+           "sim_request_descriptor", "host_request_descriptor",
+           "pallas_request_descriptor"]
 
 KIB = 1024
 
@@ -69,12 +82,16 @@ class _Timer:
 
 
 # --------------------------------------------------------------------------
-# Store read-through: request descriptors + hit/persist helpers
+# Request descriptors (content addresses for the TopologyStore)
 # --------------------------------------------------------------------------
 def sim_request_descriptor(device, n_samples: int,
                            elements: list[str] | None) -> dict:
     """Everything that determines a ``discover_sim`` result — and nothing
-    that does not (worker count and engine-vs-legacy are bit-invisible)."""
+    that does not.  Worker count, engine-vs-legacy, and batching are
+    excluded: request-keyed sample streams make them result-invisible up to
+    the ``topology_equivalent`` contract (discrete attributes exact, floats
+    within rel-tol — and bit-identical in practice on the validation
+    devices), so the key addresses that equivalence class."""
     return {
         "kind": "discover_sim",
         "backend": f"simulated:{device.name}",
@@ -86,6 +103,35 @@ def sim_request_descriptor(device, n_samples: int,
     }
 
 
+def host_request_descriptor(max_bytes: int, n_samples: int,
+                            quick: bool) -> dict:
+    return {"kind": "discover_host", "max_bytes": int(max_bytes),
+            "n_samples": int(n_samples), "quick": bool(quick)}
+
+
+def pallas_request_descriptor(model, n_samples: int,
+                              elements: list[str] | None) -> dict:
+    """Content address of a ``discover_pallas`` request.
+
+    Keyed like the sim descriptor — model identity + seed + sample count +
+    element restriction — so Pallas topologies are stored/served through
+    the same ``TopologyStore`` machinery as sim/host ones.  Measured values
+    vary run to run (real timings); the *request* is what is addressed.
+    """
+    return {
+        "kind": "discover_pallas",
+        "backend": f"pallas-interp:{model.name}",
+        "model": model.name,
+        "vendor": model.vendor,
+        "seed": model.seed,
+        "n_samples": int(n_samples),
+        "elements": sorted(elements) if elements else None,
+    }
+
+
+# --------------------------------------------------------------------------
+# Store read-through: hit/persist helpers (shared by every backend)
+# --------------------------------------------------------------------------
 def _store_lookup(store, descriptor: dict):
     """(key, stored-result-or-None): a hit reconstructs the timings the
     original run recorded, so callers see the same (topo, timings) shape."""
@@ -102,25 +148,53 @@ def _store_lookup(store, descriptor: dict):
 
 def _store_persist(store, key: str, descriptor: dict, topo: Topology,
                    timings: DiscoveryTimings, cache=None) -> None:
-    store.put(key, topo, meta={"request": descriptor,
-                               "timings": dict(timings.per_family)})
-    if cache is not None and len(cache):
-        store.put_samples(key, cache.snapshot())
+    """Write the topology + sample cache as one locked transaction, so a
+    concurrent discovery on the same store cannot interleave a topology
+    from one run with samples from another."""
+    with store.lock():
+        store.put(key, topo, meta={"request": descriptor,
+                                   "timings": dict(timings.per_family)})
+        if cache is not None and len(cache):
+            store.put_samples(key, cache.snapshot())
 
 
 # --------------------------------------------------------------------------
-# Engine-based discovery (default path)
+# The unified runner-agnostic driver
 # --------------------------------------------------------------------------
-def discover_sim(device, n_samples: int = 33,
-                 elements: list[str] | None = None, *,
-                 engine: bool = True, max_workers: int | None = None,
-                 store=None, refresh: bool = False,
-                 ) -> tuple[Topology, DiscoveryTimings]:
-    """Full MT4G-style discovery of a simulated device.
+@dataclass
+class DiscoveryRequest:
+    """One backend's worth of 'what is different': identity, runner, plan.
 
-    ``engine=True`` (default) routes through the batched probe engine;
-    ``engine=False`` runs the legacy sequential loop.  Both produce the same
-    topology for a fixed device seed.
+    Everything else — store lookup/persist, timings, sample-cache preload,
+    engine invocation, topology assembly — is the shared ``discover()``
+    implementation.  Registry-driven backends (sim, pallas) leave ``plan``
+    unset and get the full (space x family) engine; backends with a bespoke
+    probe set (host) provide a ``plan`` building scheduler work items and an
+    ``assemble`` turning the schedule result into a ``Topology``.
+    """
+
+    descriptor: dict
+    vendor: str
+    model: str
+    backend: str
+    make_runner: Callable[[], object]
+    n_samples: int = 33
+    elements: list[str] | None = None
+    device_families: tuple[str, ...] = ()
+    max_workers: int | None = None
+    clock_domain: str = "cycles"
+    cu_space: str = "sL1d"            # the space CU-sharing groups attach to
+    # Preloading persisted samples re-serves *recorded* probe rows.  That is
+    # sound only for runners whose sample streams are request-keyed (sim);
+    # measuring backends (host, pallas) must re-measure instead.
+    preload_samples: bool = True
+    plan: Callable[[object], list] | None = None
+    assemble: Callable[[object, DiscoveryTimings], Topology] | None = None
+
+
+def discover(request: DiscoveryRequest, *, store=None, refresh: bool = False,
+             ) -> tuple[Topology, DiscoveryTimings]:
+    """Run one discovery request end to end (the backend-neutral core).
 
     ``store`` (a ``TopologyStore``) makes discovery read-through/write-
     through persistent: a stored result for the same content-addressed
@@ -128,29 +202,23 @@ def discover_sim(device, n_samples: int = 33,
     run persists both the topology and the engine's sample cache.
     ``refresh=True`` skips the read (re-measures) but still writes through.
     """
-    key = descriptor = None
+    from .engine import SampleCache, run_probes
+    from .engine.cache import CachingRunner
+    from .engine.scheduler import run_work_items
+
+    key = None
     if store is not None:
-        descriptor = sim_request_descriptor(device, n_samples, elements)
         if not refresh:
-            key, hit = _store_lookup(store, descriptor)
+            key, hit = _store_lookup(store, request.descriptor)
             if hit is not None:
                 return hit
         else:
             from .engine.store import request_key
-            key = request_key(descriptor)
+            key = request_key(request.descriptor)
 
-    if not engine:
-        topo, timings = discover_sim_legacy(device, n_samples, elements)
-        if store is not None:
-            _store_persist(store, key, descriptor, topo, timings)
-        return topo, timings
-
-    from .engine import SampleCache, run_probes
-
-    runner = SimRunner(device)
     timings = DiscoveryTimings()
     cache = SampleCache()
-    if store is not None and not refresh:
+    if (store is not None and not refresh and request.preload_samples):
         # Partial-recovery path: a quarantined topology with intact samples
         # re-assembles from disk-served probe rows instead of re-measuring.
         # Never under refresh=True — that contract is a real re-measure.
@@ -158,23 +226,46 @@ def discover_sim(device, n_samples: int = 33,
         if persisted:
             cache.preload(persisted)
 
-    device_families = ["sharing", "device_memory_latency",
-                       "device_memory_bandwidth"]
-    if device.cu_share_groups and (not elements or "sL1d" in elements):
-        device_families.insert(1, "cu_sharing")
+    runner = request.make_runner()
+    if request.plan is None:
+        eng = run_probes(runner, n_samples=request.n_samples,
+                         elements=request.elements,
+                         device_families=request.device_families,
+                         max_workers=request.max_workers, timings=timings,
+                         cache=cache)
+        topo = _assemble_engine_topology(request, runner, eng, timings)
+    else:
+        cached = CachingRunner(runner, cache=cache)
+        sched = run_work_items(request.plan(cached),
+                               max_workers=request.max_workers,
+                               timings=timings)
+        topo = request.assemble(sched, timings)
 
-    eng = run_probes(runner, n_samples=n_samples, elements=elements,
-                     device_families=tuple(device_families),
-                     max_workers=max_workers, timings=timings, cache=cache)
+    if store is not None:
+        _store_persist(store, key, request.descriptor, topo, timings,
+                       cache=cache)
+    return topo, timings
 
-    topo = Topology(vendor=device.vendor, model=device.name,
-                    backend=f"simulated:{device.name}")
-    topo.set_general("clock_domain", "cycles", provenance=PROVENANCE_API)
-    topo.compute.append(ComputeElement("cores_per_sm", device.cores_per_sm))
 
-    # ---- per-space assembly, in probe order (mirrors the legacy loop)
+def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
+                              timings: DiscoveryTimings) -> Topology:
+    """Registry results -> ``Topology``, in probe order (mirrors the legacy
+    sequential loop so engine and legacy reports stay comparable).
+
+    Backend-neutral by construction: API capacities come from the runner's
+    ``api_size`` hook, core counts from ``cores_per_sm`` — never from a
+    concrete device object.
+    """
+    topo = Topology(vendor=request.vendor, model=request.model,
+                    backend=request.backend)
+    topo.set_general("clock_domain", request.clock_domain,
+                     provenance=PROVENANCE_API)
+    topo.compute.append(ComputeElement("cores_per_sm", runner.cores_per_sm))
+
+    api_size = getattr(runner, "api_size", lambda _s: None)
+
+    # ---- per-space assembly, in probe order
     for info in eng.infos:
-        lvl = device.level(info.name)
         res = eng.space_results[info.name]
         me = MemoryElement(info.name, info.kind, info.scope)
 
@@ -183,7 +274,7 @@ def discover_sim(device, n_samples: int = 33,
             if info.scope == "chip":
                 # Paper Table I: L2-style totals come from the API; the
                 # benchmark contributes the per-core segment size (§IV-F.1).
-                me.set("size", lvl.size, "B", PROVENANCE_API)
+                me.set("size", api_size(info.name), "B", PROVENANCE_API)
             else:
                 me.set("size", sr.size, "B", PROVENANCE_BENCHMARK,
                        sr.confidence)
@@ -216,7 +307,8 @@ def discover_sim(device, n_samples: int = 33,
             elif kind == "aligned":
                 # L2-style: align measured segment to the API-reported total.
                 with _Timer(timings, "amount"):
-                    k, aligned, conf = align_segments(lvl.size, payload)
+                    k, aligned, conf = align_segments(api_size(info.name),
+                                                      payload)
                 me.set("amount", k, "", PROVENANCE_BENCHMARK, conf)
                 me.set("segment_size", aligned, "B", PROVENANCE_BENCHMARK,
                        conf)
@@ -243,29 +335,208 @@ def discover_sim(device, n_samples: int = 33,
     # ---- AMD-style CU<->sL1d sharing (§IV-H)
     cus = eng.device_results.get("cu_sharing")
     if cus is not None:
-        sl1d = topo.find_memory("sL1d")
+        sl1d = topo.find_memory(request.cu_space)
         sl1d.shared_with = [",".join(map(str, g)) for g in cus.groups
                             if len(g) > 1]
         sl1d.set("exclusive_cus", cus.exclusive, "", PROVENANCE_BENCHMARK)
 
     # ---- device memory
-    dm = MemoryElement("DeviceMemory", "memory", "chip")
-    lat = eng.device_results["device_memory_latency"]
-    dm.set("load_latency", round(lat.p50, 1), "cyc", PROVENANCE_BENCHMARK)
-    bw = eng.device_results["device_memory_bandwidth"]
-    dm.set("read_bw", round(bw.read_bw / 1e9, 1), "GB/s", PROVENANCE_BENCHMARK)
-    dm.set("write_bw", round(bw.write_bw / 1e9, 1), "GB/s",
-           PROVENANCE_BENCHMARK)
-    topo.memory.append(dm)
+    if "device_memory_latency" in eng.device_results:
+        dm = MemoryElement("DeviceMemory", "memory", "chip")
+        lat = eng.device_results["device_memory_latency"]
+        dm.set("load_latency", round(lat.p50, 1), "cyc", PROVENANCE_BENCHMARK)
+        bw = eng.device_results["device_memory_bandwidth"]
+        dm.set("read_bw", round(bw.read_bw / 1e9, 1), "GB/s",
+               PROVENANCE_BENCHMARK)
+        dm.set("write_bw", round(bw.write_bw / 1e9, 1), "GB/s",
+               PROVENANCE_BENCHMARK)
+        topo.memory.append(dm)
 
     topo.notes.append(
         f"discovery wall time: {eng.wall_seconds:.2f}s (engine; "
         f"per-family cpu { {k: round(v, 2) for k, v in timings.per_family.items()} }; "
         f"cache {eng.cache_stats['hits']} hits / "
         f"{eng.cache_stats['misses']} misses)")
-    if store is not None:
-        _store_persist(store, key, descriptor, topo, timings, cache=cache)
-    return topo, timings
+    return topo
+
+
+# --------------------------------------------------------------------------
+# Backend wrappers: simulated devices
+# --------------------------------------------------------------------------
+def discover_sim(device, n_samples: int = 33,
+                 elements: list[str] | None = None, *,
+                 engine: bool = True, max_workers: int | None = None,
+                 store=None, refresh: bool = False,
+                 ) -> tuple[Topology, DiscoveryTimings]:
+    """Full MT4G-style discovery of a simulated device.
+
+    ``engine=True`` (default) routes through the unified driver and the
+    batched probe engine; ``engine=False`` runs the legacy sequential loop.
+    Both produce the same topology for a fixed device seed.  ``store`` /
+    ``refresh`` behave as documented on ``discover()``.
+    """
+    descriptor = sim_request_descriptor(device, n_samples, elements)
+
+    if not engine:
+        key = None
+        if store is not None:
+            if not refresh:
+                key, hit = _store_lookup(store, descriptor)
+                if hit is not None:
+                    return hit
+            else:
+                from .engine.store import request_key
+                key = request_key(descriptor)
+        topo, timings = discover_sim_legacy(device, n_samples, elements)
+        if store is not None:
+            _store_persist(store, key, descriptor, topo, timings)
+        return topo, timings
+
+    device_families = ["sharing", "device_memory_latency",
+                       "device_memory_bandwidth"]
+    if device.cu_share_groups and (not elements or "sL1d" in elements):
+        device_families.insert(1, "cu_sharing")
+
+    request = DiscoveryRequest(
+        descriptor=descriptor,
+        vendor=device.vendor, model=device.name,
+        backend=f"simulated:{device.name}",
+        make_runner=lambda: SimRunner(device),
+        n_samples=n_samples, elements=elements,
+        device_families=tuple(device_families),
+        max_workers=max_workers,
+        preload_samples=True,           # request-keyed streams: sound
+    )
+    return discover(request, store=store, refresh=refresh)
+
+
+# --------------------------------------------------------------------------
+# Backend wrappers: Pallas kernels (interpret mode)
+# --------------------------------------------------------------------------
+def discover_pallas(model=None, n_samples: int = 9,
+                    elements: list[str] | None = None, *,
+                    runner=None, max_workers: int | None = 0,
+                    store=None, refresh: bool = False,
+                    ) -> tuple[Topology, DiscoveryTimings]:
+    """Discovery through the real Pallas probe kernels (third backend).
+
+    Same engine, same registry, same statistics as ``discover_sim`` — the
+    runner is the only moving part, which is the point: the probe stack is
+    genuinely backend-neutral.  ``model`` is the configured ground-truth
+    hierarchy (default ``make_pallas_model()``); pass ``runner`` to reuse a
+    warmed ``PallasRunner`` (compiled kernels) across discoveries.
+
+    Probes are timing measurements, so the schedule stays inline
+    (``max_workers=0``) by default — co-running kernels would perturb each
+    other's wall clocks — and persisted samples are never preloaded (a
+    re-measure is a re-measure).  Topologies are content-addressed in the
+    ``TopologyStore`` by ``pallas_request_descriptor`` and served through
+    ``TopologyService`` exactly like sim/host ones.
+    """
+    from .probes.pallas_runner import PallasRunner, make_pallas_model
+
+    if runner is not None:
+        model = runner.model
+    elif model is None:
+        model = make_pallas_model()
+
+    device_families = ["sharing", "device_memory_latency",
+                       "device_memory_bandwidth"]
+    if model.cu_share_groups and (not elements or "sL1d" in elements):
+        device_families.insert(1, "cu_sharing")
+
+    request = DiscoveryRequest(
+        descriptor=pallas_request_descriptor(model, n_samples, elements),
+        vendor=model.vendor, model=model.name,
+        backend=f"pallas-interp:{model.name}",
+        make_runner=(lambda: runner) if runner is not None
+        else (lambda: PallasRunner(model)),
+        n_samples=n_samples, elements=elements,
+        device_families=tuple(device_families),
+        max_workers=max_workers,
+        clock_domain="interp-cycles",   # chain-length units, timed end-to-end
+        preload_samples=False,          # real measurements: always re-measure
+    )
+    return discover(request, store=store, refresh=refresh)
+
+
+# --------------------------------------------------------------------------
+# Backend wrappers: this machine's CPU hierarchy
+# --------------------------------------------------------------------------
+def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
+                  quick: bool = True, *, store=None, refresh: bool = False,
+                  ) -> tuple[Topology, DiscoveryTimings]:
+    """Live discovery of this machine's CPU hierarchy (real measurements).
+
+    The host hierarchy has one probeable space, so instead of the registry
+    it hands the unified driver a small custom work-item plan (size ∥
+    latencies ∥ bandwidths, all independent on real hardware) — sharing the
+    same store, caching, scheduling, and timing machinery as the other
+    backends.  ``store`` works as in ``discover()`` — host measurements are
+    slow and real, so serving a prior run of the same request from the
+    store is the common production path; ``refresh=True`` forces a
+    re-measure.
+    """
+    from .engine import WorkItem
+
+    def plan(runner):
+        return [
+            WorkItem(key="size", family="size", fn=lambda _r: find_size(
+                runner, "host-cache", lo=8 * KIB, step=4 * KIB,
+                n_samples=n_samples, max_bytes=max_bytes, max_points=24,
+                max_widenings=1, batched=True)),
+            WorkItem(key="lat_small", family="latency", fn=lambda _r:
+                     measure_latency(runner, "host-cache",
+                                     fetch_granularity=64,
+                                     n_samples=n_samples, array_factor=256)),
+            WorkItem(key="lat_big", family="latency", fn=lambda _r:
+                     measure_latency(runner, "host-cache",
+                                     fetch_granularity=4096,
+                                     n_samples=n_samples,
+                                     array_factor=max_bytes // 4096 // 2)),
+            WorkItem(key="bw_read", family="bandwidth",
+                     fn=lambda _r: runner.bandwidth("DRAM", "read")),
+            WorkItem(key="bw_write", family="bandwidth",
+                     fn=lambda _r: runner.bandwidth("DRAM", "write")),
+        ]
+
+    def assemble(sched, timings):
+        topo = Topology(vendor="host", model="cpu", backend="cpu")
+        me = MemoryElement("host-cache", "cache", "host")
+        sr = sched.results["size"]
+        if sr.found:
+            me.set("size", sr.size, "B", PROVENANCE_BENCHMARK, sr.confidence)
+        me.set("load_latency", round(sched.results["lat_small"].mean, 2),
+               "ns", PROVENANCE_BENCHMARK)
+        topo.memory.append(me)
+
+        dram = MemoryElement("DRAM", "memory", "host")
+        dram.set("load_latency", round(sched.results["lat_big"].mean, 2),
+                 "ns", PROVENANCE_BENCHMARK)
+        dram.set("read_bw", round(sched.results["bw_read"] / 1e9, 2), "GB/s",
+                 PROVENANCE_BENCHMARK)
+        dram.set("write_bw", round(sched.results["bw_write"] / 1e9, 2),
+                 "GB/s", PROVENANCE_BENCHMARK)
+        topo.memory.append(dram)
+        topo.notes.append("host runner: per-sample = mean ns/load of a "
+                          "jitted dependent chase (DESIGN.md adaptation "
+                          "note 1)")
+        return topo
+
+    request = DiscoveryRequest(
+        descriptor=host_request_descriptor(max_bytes, n_samples, quick),
+        vendor="host", model="cpu", backend="cpu",
+        make_runner=lambda: HostRunner(
+            max_bytes=max_bytes, iters=1 << 14 if quick else 1 << 16),
+        n_samples=n_samples,
+        # Real measurements are perturbed by co-running probes: keep the
+        # host schedule serial so timings stay trustworthy — the engine's
+        # value here is the shared orchestration, not parallelism.
+        max_workers=1,
+        preload_samples=False,          # real measurements: always re-measure
+        plan=plan, assemble=assemble,
+    )
+    return discover(request, store=store, refresh=refresh)
 
 
 # --------------------------------------------------------------------------
@@ -416,91 +687,6 @@ def discover_sim_legacy(device, n_samples: int = 33,
 
     topo.notes.append(f"discovery wall time: {timings.total:.2f}s "
                       f"({ {k: round(v, 2) for k, v in timings.per_family.items()} })")
-    return topo, timings
-
-
-def host_request_descriptor(max_bytes: int, n_samples: int,
-                            quick: bool) -> dict:
-    return {"kind": "discover_host", "max_bytes": int(max_bytes),
-            "n_samples": int(n_samples), "quick": bool(quick)}
-
-
-def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
-                  quick: bool = True, *, store=None, refresh: bool = False,
-                  ) -> tuple[Topology, DiscoveryTimings]:
-    """Live discovery of this machine's CPU hierarchy (real measurements).
-
-    A thin driver over the engine scheduler: the host hierarchy has one
-    probeable space, so the work-item DAG is small (size ∥ latencies ∥
-    bandwidths, all independent on real hardware) — but it shares the same
-    scheduling, caching, and timing machinery as the simulated path.
-
-    ``store`` works as in ``discover_sim`` — host measurements are slow and
-    real, so serving a prior run of the same request from the store is the
-    common production path; ``refresh=True`` forces a re-measure.
-    """
-    from .engine import WorkItem, run_work_items
-    from .engine.cache import CachingRunner
-
-    key = descriptor = None
-    if store is not None:
-        descriptor = host_request_descriptor(max_bytes, n_samples, quick)
-        if not refresh:
-            key, hit = _store_lookup(store, descriptor)
-            if hit is not None:
-                return hit
-        else:
-            from .engine.store import request_key
-            key = request_key(descriptor)
-
-    runner = CachingRunner(
-        HostRunner(max_bytes=max_bytes, iters=1 << 14 if quick else 1 << 16))
-    topo = Topology(vendor="host", model="cpu", backend="cpu")
-    timings = DiscoveryTimings()
-
-    items = [
-        WorkItem(key="size", family="size", fn=lambda _r: find_size(
-            runner, "host-cache", lo=8 * KIB, step=4 * KIB,
-            n_samples=n_samples, max_bytes=max_bytes, max_points=24,
-            max_widenings=1, batched=True)),
-        WorkItem(key="lat_small", family="latency", fn=lambda _r:
-                 measure_latency(runner, "host-cache", fetch_granularity=64,
-                                 n_samples=n_samples, array_factor=256)),
-        WorkItem(key="lat_big", family="latency", fn=lambda _r:
-                 measure_latency(runner, "host-cache", fetch_granularity=4096,
-                                 n_samples=n_samples,
-                                 array_factor=max_bytes // 4096 // 2)),
-        WorkItem(key="bw_read", family="bandwidth",
-                 fn=lambda _r: runner.bandwidth("DRAM", "read")),
-        WorkItem(key="bw_write", family="bandwidth",
-                 fn=lambda _r: runner.bandwidth("DRAM", "write")),
-    ]
-    # Real measurements are perturbed by co-running probes: keep the host
-    # schedule serial (max_workers=1) so timings stay trustworthy — the
-    # engine's value here is the shared orchestration, not parallelism.
-    sched = run_work_items(items, max_workers=1, timings=timings)
-
-    me = MemoryElement("host-cache", "cache", "host")
-    sr = sched.results["size"]
-    if sr.found:
-        me.set("size", sr.size, "B", PROVENANCE_BENCHMARK, sr.confidence)
-    me.set("load_latency", round(sched.results["lat_small"].mean, 2), "ns",
-           PROVENANCE_BENCHMARK)
-    topo.memory.append(me)
-
-    dram = MemoryElement("DRAM", "memory", "host")
-    dram.set("load_latency", round(sched.results["lat_big"].mean, 2), "ns",
-             PROVENANCE_BENCHMARK)
-    dram.set("read_bw", round(sched.results["bw_read"] / 1e9, 2), "GB/s",
-             PROVENANCE_BENCHMARK)
-    dram.set("write_bw", round(sched.results["bw_write"] / 1e9, 2), "GB/s",
-             PROVENANCE_BENCHMARK)
-    topo.memory.append(dram)
-    topo.notes.append("host runner: per-sample = mean ns/load of a jitted "
-                      "dependent chase (DESIGN.md adaptation note 1)")
-    if store is not None:
-        _store_persist(store, key, descriptor, topo, timings,
-                       cache=runner.cache)
     return topo, timings
 
 

@@ -11,7 +11,7 @@ from .engine import DEVICE_KEY, EngineResult, run_probes
 from .registry import (DEVICE_FAMILIES, SPACE_FAMILIES, ProbeContext,
                        ProbeSpec, device_probe_specs, space_probe_specs)
 from .scheduler import ScheduleResult, WorkItem, run_work_items
-from .store import StoredTopology, TopologyStore, request_key
+from .store import StoredTopology, StoreLock, TopologyStore, request_key
 
 __all__ = [
     "CachingRunner", "SampleCache",
@@ -19,5 +19,5 @@ __all__ = [
     "DEVICE_FAMILIES", "SPACE_FAMILIES", "ProbeContext", "ProbeSpec",
     "device_probe_specs", "space_probe_specs",
     "ScheduleResult", "WorkItem", "run_work_items",
-    "StoredTopology", "TopologyStore", "request_key",
+    "StoredTopology", "StoreLock", "TopologyStore", "request_key",
 ]

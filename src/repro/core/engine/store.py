@@ -19,13 +19,24 @@ Layout under the store root::
 Writes are atomic (temp file + ``os.replace``); reads that hit corrupted
 files quarantine them into ``corrupt/`` and report a miss, so a damaged
 store degrades to re-discovery instead of failing the request.
+
+Concurrent discoveries on one store additionally take an **advisory write
+lock** (``fcntl.flock`` on ``<root>/.lock``; an exclusive-create lockfile
+where ``fcntl`` is unavailable): atomic replace already keeps individual
+files intact, but a discovery persists a topology *and* its sample archive
+as a pair, and two processes interleaving those writes could leave a
+topology from one run next to samples from another.  ``lock()`` is
+re-entrant within a thread, so callers can span multi-file transactions
+while the store's own writes stay safe when used bare.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import io
 import json
 import os
+import threading
 import time
 import zipfile
 from dataclasses import dataclass, field
@@ -34,9 +45,99 @@ import numpy as np
 
 from ..topology import Topology
 
-__all__ = ["TopologyStore", "StoredTopology", "request_key"]
+__all__ = ["TopologyStore", "StoredTopology", "StoreLock", "request_key"]
 
 SCHEMA_VERSION = 1
+
+try:
+    import fcntl
+except ImportError:                                    # non-POSIX fallback
+    fcntl = None
+
+
+class StoreLock:
+    """Advisory, re-entrant, cross-process write lock for one store root.
+
+    POSIX: ``flock`` on a dedicated lock file — released automatically by
+    the OS if the holder dies, so no stale-lock handling is needed.
+    Fallback: an exclusive-create lockfile holding the owner pid, polled
+    with a timeout; locks older than ``stale_seconds`` are broken (the
+    holder crashed before unlinking).
+    """
+
+    def __init__(self, path: str, *, timeout: float = 30.0,
+                 poll: float = 0.05, stale_seconds: float = 300.0):
+        self.path = path
+        self.timeout = timeout
+        self.poll = poll
+        self.stale_seconds = stale_seconds
+        self._tls = threading.local()
+
+    @property
+    def _depth(self) -> int:
+        return getattr(self._tls, "depth", 0)
+
+    def acquire(self) -> None:
+        if self._depth:                                # re-entrant
+            self._tls.depth += 1
+            return
+        if fcntl is not None:
+            fd = os.open(self.path, os.O_CREAT | os.O_RDWR, 0o644)
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            self._tls.fd = fd
+        else:
+            deadline = time.monotonic() + self.timeout
+            while True:
+                try:
+                    fd = os.open(self.path,
+                                 os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
+                    os.write(fd, str(os.getpid()).encode())
+                    self._tls.fd = fd
+                    break
+                except FileExistsError:
+                    try:
+                        age = time.time() - os.path.getmtime(self.path)
+                        if age > self.stale_seconds:
+                            os.unlink(self.path)       # break a dead holder
+                            continue
+                    except OSError:
+                        continue
+                    if time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"store lock busy for >{self.timeout}s: "
+                            f"{self.path}")
+                    time.sleep(self.poll)
+        self._tls.depth = 1
+
+    def release(self) -> None:
+        depth = self._depth
+        if depth > 1:
+            self._tls.depth = depth - 1
+            return
+        fd = getattr(self._tls, "fd", None)
+        self._tls.depth = 0
+        self._tls.fd = None
+        if fd is None:
+            return
+        if fcntl is not None:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+            os.close(fd)
+        else:
+            os.close(fd)
+            with contextlib.suppress(OSError):
+                os.unlink(self.path)
+
+    @property
+    def held(self) -> bool:
+        return self._depth > 0
+
+    def __enter__(self) -> "StoreLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.release()
+        return False
 
 
 def request_key(descriptor: dict) -> str:
@@ -74,9 +175,20 @@ class TopologyStore:
         self._corrupt_dir = os.path.join(self.root, "corrupt")
         for d in (self._topo_dir, self._samples_dir):
             os.makedirs(d, exist_ok=True)
+        self._lock = StoreLock(os.path.join(self.root, ".lock"))
         self.hits = 0
         self.misses = 0
         self.corrupt = 0
+
+    def lock(self) -> StoreLock:
+        """The store's advisory write lock (re-entrant context manager).
+
+        Individual ``put``/``put_samples``/``delete`` calls take it on
+        their own; wrap multi-file transactions — a topology plus its
+        sample archive — in one ``with store.lock():`` block so concurrent
+        discoveries cannot interleave the pair.
+        """
+        return self._lock
 
     # ------------------------------------------------------------- paths
     def _topo_path(self, key: str) -> str:
@@ -121,8 +233,9 @@ class TopologyStore:
         if meta:
             doc_meta.update(meta)
         doc = {"meta": doc_meta, "topology": topo.to_json()}
-        self._atomic_write(self._topo_path(key),
-                           json.dumps(doc, sort_keys=True).encode())
+        with self._lock:
+            self._atomic_write(self._topo_path(key),
+                               json.dumps(doc, sort_keys=True).encode())
         return key
 
     def _read_doc(self, key: str) -> dict | None:
@@ -164,11 +277,12 @@ class TopologyStore:
         return os.path.exists(self._topo_path(key))
 
     def delete(self, key: str) -> None:
-        for path in (self._topo_path(key), self._samples_path(key)):
-            try:
-                os.remove(path)
-            except FileNotFoundError:
-                pass
+        with self._lock:
+            for path in (self._topo_path(key), self._samples_path(key)):
+                try:
+                    os.remove(path)
+                except FileNotFoundError:
+                    pass
 
     def keys(self) -> list[str]:
         return sorted(os.path.splitext(f)[0]
@@ -227,7 +341,8 @@ class TopologyStore:
             arrays[f"a{i}"] = np.asarray(arr)
         buf = io.BytesIO()
         np.savez_compressed(buf, manifest=json.dumps(manifest), **arrays)
-        self._atomic_write(self._samples_path(key), buf.getvalue())
+        with self._lock:
+            self._atomic_write(self._samples_path(key), buf.getvalue())
 
     def load_samples(self, key: str) -> dict | None:
         """Load persisted sample entries; corrupted archives miss (+quarantine)."""

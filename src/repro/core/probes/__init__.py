@@ -1,5 +1,7 @@
 """Microbenchmark probes (paper contribution C2)."""
-from .runners import HostRunner, ProbeRunner, SimRunner, SpaceInfo, sattolo_cycle
+from .runners import (HostRunner, ProbeRunner, SimRunner, SpaceInfo,
+                      random_cycle, sattolo_cycle)
+from .pallas_runner import PallasRunner, make_pallas_model
 from .size import SizeResult, find_size
 from .latency import LatencyResult, measure_latency
 from .linesize import (GranularityResult, LineSizeResult,
@@ -12,7 +14,8 @@ from .bandwidth import (BandwidthResult, CollectiveEstimate, all_to_all_time,
 from .adjacency import AdjacencyResult, SimPod, find_link_adjacency
 
 __all__ = [
-    "HostRunner", "ProbeRunner", "SimRunner", "SpaceInfo", "sattolo_cycle",
+    "HostRunner", "PallasRunner", "ProbeRunner", "SimRunner", "SpaceInfo",
+    "make_pallas_model", "random_cycle", "sattolo_cycle",
     "SizeResult", "find_size", "LatencyResult", "measure_latency",
     "GranularityResult", "LineSizeResult", "find_fetch_granularity",
     "find_line_size", "snap_pow2",

@@ -7,12 +7,23 @@ agnostic — the same code drives:
 * ``HostRunner``  — real measurements on this machine's CPU hierarchy using
                     jit-compiled dependent-load chases (the live-hardware
                     sanity check; TPU/GPU-free analogue of paper §V);
-* ``PallasRunner``— the TPU-target kernels in ``repro.kernels`` (pchase_probe,
-                    stream_probe), exercised in interpret mode here.
+* ``PallasRunner``— the TPU-target kernels in ``repro.kernels``
+                    (``pchase_probe``/``pchase_kernel_batch``,
+                    ``stream_probe``), executed in Pallas interpret mode and
+                    timed end-to-end against a configured ground-truth
+                    hierarchy; lives in ``pallas_runner.py`` and is the
+                    third backend of the unified ``discover()`` driver.
 
 Per DESIGN.md adaptation note 1, runners without an in-kernel clock time a
 short dependent chain end-to-end and report the distribution across
 repetitions; the K-S evaluation is identical either way.
+
+``deterministic`` (class attribute) tells callers whether repeating a
+request returns bit-identical samples: true for the request-keyed simulated
+runners, false for runners whose samples are real wall-time measurements
+(Host, Pallas).  The engine's caches are correctness-neutral only for
+deterministic runners; for measuring runners they are a documented
+trade-off (serve the first measurement) that discovery relies on anyway.
 """
 from __future__ import annotations
 
@@ -22,7 +33,8 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
-__all__ = ["ProbeRunner", "SpaceInfo", "SimRunner", "HostRunner", "sattolo_cycle"]
+__all__ = ["ProbeRunner", "SpaceInfo", "SimRunner", "HostRunner",
+           "sattolo_cycle", "random_cycle"]
 
 
 @dataclass(frozen=True)
@@ -75,11 +87,31 @@ def sattolo_cycle(n: int, rng: np.random.Generator) -> np.ndarray:
     return perm
 
 
+def random_cycle(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Vectorized Sattolo equivalent: a uniform random single-cycle
+    permutation built from one ``rng.permutation`` call.
+
+    ``sattolo_cycle`` walks an O(n) Python loop — fine for host-probe slot
+    counts, too slow for the Pallas sweeps that need fresh million-slot
+    buffers.  Visiting a random ordering ``sigma`` cyclically
+    (``perm[sigma[i]] = sigma[i+1]``) yields exactly the Sattolo
+    distribution (every n-cycle equally likely), in numpy time.
+    """
+    if n <= 1:
+        return np.zeros(max(n, 1), dtype=np.int32)
+    sigma = rng.permutation(n).astype(np.int32)
+    perm = np.empty(n, dtype=np.int32)
+    perm[sigma] = np.roll(sigma, -1)
+    return perm
+
+
 # --------------------------------------------------------------------------
 # Simulated runner
 # --------------------------------------------------------------------------
 class SimRunner:
     """Adapts a ``SimDevice`` to the ProbeRunner protocol."""
+
+    deterministic = True     # request-keyed sample streams
 
     def __init__(self, device):
         self.device = device
@@ -162,6 +194,7 @@ class HostRunner:
     """
 
     ELEM_BYTES = 4  # int32 chase indices
+    deterministic = False    # samples are real wall-time measurements
 
     def __init__(self, max_bytes: int = 256 * 1024**2, iters: int = 1 << 15,
                  seed: int = 0):

@@ -171,6 +171,45 @@ class SimDevice:
         touched = math.ceil(array_bytes / max(stride, line))
         return touched * line
 
+    # ----------------------------------------------------- model hooks
+    # Public, noise-free views of the behavioral model.  ``SimDevice``'s own
+    # probe API draws sampled latencies around them; the ``PallasRunner``
+    # reuses them as its configured ground truth — the modeled level an
+    # access hits sets the executed chain length of a *real* Pallas kernel,
+    # and the caller times that kernel end-to-end.
+    def hit_latency(self, space: str, array_bytes: int, stride: int) -> float:
+        """Mean latency (cycles) of the level a warm strided chase hits."""
+        return self._hit_level(space, int(array_bytes), int(stride))[0]
+
+    def next_level_latency(self, space: str) -> float:
+        """Mean latency of the next level behind ``space`` (miss cost)."""
+        return self._next_latency(self.level(space))
+
+    def cold_miss_pattern(self, space: str, array_bytes: int, stride: int,
+                          n_loads: int) -> np.ndarray:
+        """Per-load miss mask of a cold pass (§IV-D): load i misses iff it
+        opens a new ``fetch_granularity``-byte segment."""
+        g = self.level(space).fetch_granularity
+        n = max(min(int(array_bytes) // max(int(stride), 1), int(n_loads)), 1)
+        seg = (np.arange(n) * int(stride)) // g
+        prev_seg = np.concatenate([[-1], seg[:-1]])
+        return seg != prev_seg
+
+    def amount_evicted(self, space: str, core_a: int, core_b: int,
+                       array_bytes: int) -> bool:
+        """§IV-F eviction model: same segment AND 2x footprint > segment."""
+        lvl = self.level(space)
+        seg_size = lvl.size // max(lvl.amount, 1)
+        per_seg_cores = max(self.cores_per_sm // max(lvl.amount, 1), 1)
+        same_segment = (core_a // per_seg_cores) == (core_b // per_seg_cores)
+        return same_segment and 2 * int(array_bytes) > seg_size
+
+    def sharing_evicted(self, space_a: str, space_b: str,
+                        array_bytes: int) -> bool:
+        """§IV-G eviction model: same physical group AND over capacity."""
+        la, lb = self.level(space_a), self.level(space_b)
+        return la.group == lb.group and 2 * int(array_bytes) > la.size
+
     # -------------------------------------------------------- probe API
     def _hit_level(self, space: str, array_bytes: int,
                    stride: int) -> tuple[float, float]:

@@ -47,18 +47,40 @@ def _l1_refine(s: np.ndarray, idx: int, window: int, min_segment: int) -> int:
     The K-S scan locates the regime change; minimizing the sum of absolute
     deviations from per-segment medians pinpoints the boundary and is immune
     to lone outliers (unlike an L2 refinement).
+
+    Vectorized over the whole candidate window (one masked median + one
+    masked reduction per side instead of a Python loop per candidate — the
+    last per-candidate loop in the change-point path).  Ties resolve to the
+    first (lowest) candidate index, like the sequential scan did; float
+    summation order differs from the old per-candidate loop, so results can
+    flip on exact cost ties — which is why the engine==legacy contract is
+    discrete attributes + rel-tol floats, not bit equality.
     """
     n = s.size
     lo = max(min_segment, idx - window)
     hi = min(n - min_segment, idx + window)
-    best_idx, best_cost = idx, np.inf
-    for i in range(lo, hi + 1):
-        left, right = s[:i], s[i:]
-        cost = (np.abs(left - np.median(left)).sum()
-                + np.abs(right - np.median(right)).sum())
-        if cost < best_cost:
-            best_cost, best_idx = cost, i
-    return best_idx
+    if hi < lo:
+        return idx
+    idxs = np.arange(lo, hi + 1)
+    left_mask = np.arange(n)[None, :] < idxs[:, None]     # (W, n)
+
+    def masked_medians(mask: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+        """Per-row median of the masked elements: pad the complement with
+        +inf, sort, and average the two middle positions of each row."""
+        padded = np.where(mask, s[None, :], np.inf)
+        padded.sort(axis=1)
+        lo_mid = (sizes - 1) // 2
+        hi_mid = sizes // 2
+        rows = np.arange(sizes.size)
+        return 0.5 * (padded[rows, lo_mid] + padded[rows, hi_mid])
+
+    left_med = masked_medians(left_mask, idxs)
+    right_med = masked_medians(~left_mask, n - idxs)
+    cost = (np.where(left_mask, np.abs(s[None, :] - left_med[:, None]),
+                     0.0).sum(axis=1)
+            + np.where(left_mask, 0.0,
+                       np.abs(s[None, :] - right_med[:, None])).sum(axis=1))
+    return int(idxs[np.argmin(cost)])
 
 
 def ks_change_point(

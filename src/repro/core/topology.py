@@ -18,6 +18,7 @@ from typing import Any
 
 __all__ = [
     "Attribute", "MemoryElement", "ComputeElement", "Link", "Topology",
+    "topology_equivalent",
     "PROVENANCE_API", "PROVENANCE_BENCHMARK", "PROVENANCE_CATALOG",
 ]
 
@@ -246,3 +247,68 @@ class Topology:
         if self.notes:
             lines += ["## Notes", ""] + [f"- {n}" for n in self.notes]
         return "\n".join(lines)
+
+
+def _values_equivalent(a: Any, b: Any, rel_tol: float) -> bool:
+    """Discrete values exactly equal; floats within ``rel_tol`` relative."""
+    import math
+
+    if isinstance(a, bool) or isinstance(b, bool):
+        return a == b
+    if isinstance(a, float) or isinstance(b, float):
+        if not (isinstance(a, (int, float)) and isinstance(b, (int, float))):
+            return False
+        return math.isclose(float(a), float(b), rel_tol=rel_tol, abs_tol=0.0)
+    return a == b
+
+
+def topology_equivalent(a: "Topology", b: "Topology", *,
+                        rel_tol: float = 1e-6) -> bool:
+    """Equality contract between two discovery paths over the same device.
+
+    Discrete attributes — sizes, line sizes, granularities, amounts,
+    element names/order, shared_with lists, provenance — must match
+    *exactly*; float-valued attributes (latencies, bandwidths, confidences)
+    match within ``rel_tol`` relative tolerance.  This is the engine==legacy
+    identity the ROADMAP prescribes: vectorized statistics cannot promise
+    bit-equal float summation order, only equal decisions and near-equal
+    metrics.  Notes (free-text wall-time diagnostics) are ignored.
+    """
+    if (a.vendor, a.model, a.backend) != (b.vendor, b.model, b.backend):
+        return False
+    if [m.name for m in a.memory] != [m.name for m in b.memory]:
+        return False
+    if [(c.name, c.count) for c in a.compute] != \
+            [(c.name, c.count) for c in b.compute]:
+        return False
+    if sorted(a.general) != sorted(b.general):
+        return False
+    for key, ga in a.general.items():
+        gb = b.general[key]
+        if (ga.unit, ga.provenance) != (gb.unit, gb.provenance):
+            return False
+        if not _values_equivalent(ga.value, gb.value, rel_tol):
+            return False
+    if [(l.name, l.endpoints) for l in a.links] != \
+            [(l.name, l.endpoints) for l in b.links]:
+        return False
+    for ma, mb in zip(a.memory, b.memory):
+        if (ma.kind, ma.scope) != (mb.kind, mb.scope):
+            return False
+        if ma.shared_with != mb.shared_with:
+            return False
+        if sorted(ma.attrs) != sorted(mb.attrs):
+            return False
+        for key, aa in ma.attrs.items():
+            ab = mb.attrs[key]
+            if (aa.unit, aa.provenance) != (ab.unit, ab.provenance):
+                return False
+            if not _values_equivalent(aa.value, ab.value, rel_tol):
+                return False
+            ca, cb = aa.confidence, ab.confidence
+            if (ca is None) != (cb is None):
+                return False
+            if ca is not None and not _values_equivalent(float(ca), float(cb),
+                                                         rel_tol):
+                return False
+    return True

@@ -10,11 +10,12 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention
-from .pchase_probe import pchase_kernel
+from .pchase_probe import pchase_kernel, pchase_kernel_batch
 from .rwkv6_scan import wkv6_chunked_kernel
 from .stream_probe import stream_read_kernel, stream_write_kernel
 
-__all__ = ["mha", "wkv6", "stream_read", "stream_write", "pchase"]
+__all__ = ["mha", "wkv6", "stream_read", "stream_write", "pchase",
+           "pchase_batch"]
 
 
 def mha(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=True):
@@ -43,3 +44,10 @@ def stream_write(x, *, block=64 * 1024, interpret=True):
 
 def pchase(perm, *, iters, interpret=True):
     return pchase_kernel(perm, iters=iters, interpret=interpret)
+
+
+def pchase_batch(perms, steps, *, interpret=True):
+    """Grid-batched p-chase: (R, N) padded cycles + (R,) per-row chain
+    lengths -> (R, 2) [cursor, checksum] rows (one launch per sweep)."""
+    return pchase_kernel_batch(perms, jnp.asarray(steps, jnp.int32),
+                               interpret=interpret)

@@ -10,6 +10,12 @@ cannot run ahead; the chain is serialized by construction (each load's
 address is the previous load's value). Output returns the final cursor and
 a visit checksum so the chain cannot be dead-code-eliminated; both are also
 the correctness contract checked against ref.py.
+
+``pchase_kernel_batch`` is the probe-engine variant: a whole §IV-B size
+sweep maps onto the grid dimension — row i carries its own single-cycle
+permutation (padded to a shared width) and its own chain length, read from
+a per-row scalar so sweeps with different step counts reuse one compiled
+kernel.  This is the runner API ``PallasRunner.pchase_batch`` is built on.
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pchase_kernel"]
+__all__ = ["pchase_kernel", "pchase_kernel_batch", "pchase_reference"]
 
 
 def _kernel(perm_ref, out_ref, *, iters: int):
@@ -46,3 +52,60 @@ def pchase_kernel(perm: jax.Array, *, iters: int,
         out_shape=jax.ShapeDtypeStruct((2,), jnp.int32),
         interpret=interpret,
     )(perm)
+
+
+def _batch_kernel(steps_ref, perm_ref, out_ref):
+    steps = steps_ref[0]
+
+    def body(_, carry):
+        cursor, checksum = carry
+        nxt = perm_ref[0, cursor]
+        return nxt, checksum + nxt
+
+    cursor, checksum = jax.lax.fori_loop(
+        0, steps, body, (jnp.int32(0), jnp.int32(0)))
+    out_ref[0, 0] = cursor
+    out_ref[0, 1] = checksum
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pchase_kernel_batch(perms: jax.Array, steps: jax.Array, *,
+                        interpret: bool = True) -> jax.Array:
+    """Grid-batched p-chase: one kernel launch for a whole size sweep.
+
+    ``perms`` (R, N) int32 — row i is a single-cycle permutation over its
+    first ``n_i <= N`` slots, zero-padded to the shared width (the chain
+    starts at 0 and never leaves its cycle, so padding is never read).
+    ``steps`` (R,) int32 — per-row dependent-chain length, read inside the
+    kernel rather than baked in as a static arg, so every sweep with the
+    same (R, N) shape reuses one compiled kernel.
+
+    Returns (R, 2) int32 ``[final_cursor, checksum]`` rows, the same
+    correctness contract as ``pchase_kernel``.
+    """
+    r, n = perms.shape
+    return pl.pallas_call(
+        _batch_kernel,
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                  pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 2), jnp.int32),
+        interpret=interpret,
+    )(steps, perms)
+
+
+def pchase_reference(perm, steps: int) -> tuple[int, int]:
+    """Pure-Python chain walk: the correctness contract for both kernels.
+
+    int32 wrap-around on the checksum matches the kernel's arithmetic.
+    """
+    import numpy as np
+
+    p = np.asarray(perm)
+    cursor = 0
+    checksum = np.int32(0)
+    for _ in range(int(steps)):
+        cursor = int(p[cursor])
+        checksum = np.int32(checksum + np.int32(cursor))
+    return cursor, int(checksum)

@@ -148,10 +148,16 @@ class TestCli:
         assert "self-test passed" in proc.stdout
 
     def test_committed_baseline_is_well_formed(self):
+        """Every gated row is present and its declared correctness bools
+        hold in the committed budgets (identical= for the sim rows,
+        discrete_ok=/store_hit= for the Pallas backend row)."""
+        from check_regression import GATES
+
         with open(os.path.join(REPO, "BENCH_BASELINE.json")) as f:
             rows = json.load(f)
         names = {r["name"] for r in rows}
-        assert names >= {"engine_speedup", "topology_query"}
+        assert names >= {"engine_speedup", "topology_query", "pallas_interp"}
         for r in rows:
             d = parse_derived(r["derived"])
-            assert d.get("identical") == "True"
+            for metric in GATES.get(r["name"], {}).get("bools", ()):
+                assert d.get(metric) == "True", (r["name"], metric)

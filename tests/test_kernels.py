@@ -140,3 +140,38 @@ def test_pchase_full_cycle_returns_home():
     perm = sattolo_cycle(128, rng)
     out = np.asarray(ops.pchase(jnp.asarray(perm), iters=128))
     assert out[0] == 0
+
+
+def test_pchase_batch_matches_single_rows():
+    """Grid-batched chase: per-row padded cycles + per-row chain lengths
+    must agree with the single kernel (and the python oracle) row by row."""
+    rng = np.random.default_rng(3)
+    ns = [16, 64, 256]
+    steps = np.array([40, 700, 2500], np.int32)
+    nmax = max(ns)
+    perms = np.zeros((len(ns), nmax), np.int32)
+    for i, n in enumerate(ns):
+        perms[i, :n] = sattolo_cycle(n, rng)
+    out = np.asarray(ops.pchase_batch(jnp.asarray(perms), steps))
+    assert out.shape == (3, 2)
+    for i, n in enumerate(ns):
+        single = np.asarray(ops.pchase(jnp.asarray(perms[i, :n]),
+                                       iters=int(steps[i])))
+        assert np.array_equal(out[i], single)
+        cursor, checksum = ref.pchase_ref(perms[i, :n], int(steps[i]))
+        assert out[i, 0] == cursor and out[i, 1] == checksum
+
+
+def test_pchase_batch_dynamic_steps_no_retrace():
+    """Chain lengths are data, not static args: same shapes with new step
+    counts must reuse the compiled kernel (steps live in the same jaxpr)."""
+    rng = np.random.default_rng(4)
+    perms = np.zeros((2, 64), np.int32)
+    for i in range(2):
+        perms[i] = sattolo_cycle(64, rng)
+    p = jnp.asarray(perms)
+    a = np.asarray(ops.pchase_batch(p, np.array([64, 128], np.int32)))
+    b = np.asarray(ops.pchase_batch(p, np.array([128, 64], np.int32)))
+    # full-cycle rows return home; the swapped steps swap the outcomes
+    assert a[0, 0] == 0 and b[1, 0] == 0
+    assert np.array_equal(a[0], b[1]) and np.array_equal(a[1], b[0])

@@ -1,0 +1,220 @@
+"""ProbeRunner conformance suite — one contract, three backends.
+
+The probe workflows are runner-agnostic; this suite pins down what that
+means operationally by running the same assertions against ``SimRunner``,
+``HostRunner``, and ``PallasRunner``: protocol shape, sample array
+shapes/dtypes, batch==loop equivalence (exact for runners with
+request-keyed deterministic streams, structural for runners whose samples
+are real wall-time measurements), and ``SpaceInfo`` capability flags being
+honored by both the runners and the engine registry.
+
+Pallas parameters are marked ``slow`` (interpret-mode kernels compile on
+first touch); the fast lane runs the sim/host rows.
+"""
+import numpy as np
+import pytest
+
+from repro.core import make_h100_like
+from repro.core.engine.registry import space_probe_specs
+from repro.core.probes import (HostRunner, PallasRunner, ProbeRunner,
+                               SimRunner, make_pallas_model, random_cycle,
+                               sattolo_cycle)
+
+KIB, MIB = 1024, 1024**2
+
+# Per backend: runner factory, a bandwidth-capable space, and whether
+# cold-pass requests on unsupported spaces must raise (the measuring
+# backends have no cold-pass control at all / outside cache spaces; the
+# simulator can serve them even where discovery never asks).
+BACKENDS = {
+    "sim": dict(
+        make=lambda: SimRunner(make_h100_like(seed=3)),
+        bw_space="L2",
+        cold_unsupported_raises=False,
+    ),
+    "host": dict(
+        make=lambda: HostRunner(max_bytes=8 * MIB, iters=1 << 12),
+        bw_space="DRAM",
+        cold_unsupported_raises=True,
+    ),
+    "pallas": dict(
+        make=lambda: PallasRunner(make_pallas_model(), base_steps=2048,
+                                  cold_reps=2),
+        bw_space="L2",
+        cold_unsupported_raises=True,
+    ),
+}
+
+PARAMS = [
+    pytest.param("sim", id="sim"),
+    pytest.param("host", id="host"),
+    pytest.param("pallas", id="pallas", marks=pytest.mark.slow),
+]
+
+
+@pytest.fixture(scope="module", params=PARAMS)
+def backend(request):
+    cfg = BACKENDS[request.param]
+    return {"name": request.param, "runner": cfg["make"](), **cfg}
+
+
+def _probe_space(runner):
+    """A (space, in-capacity array size) pair valid for any backend."""
+    info = runner.spaces()[0]
+    return info, min(info.max_bytes // 8, 64 * KIB)
+
+
+class TestProtocolSurface:
+    def test_satisfies_probe_runner_protocol(self, backend):
+        assert isinstance(backend["runner"], ProbeRunner)
+
+    def test_declares_determinism(self, backend):
+        det = backend["runner"].deterministic
+        assert isinstance(det, bool)
+        assert det == (backend["name"] == "sim")
+
+    def test_spaces_well_formed(self, backend):
+        infos = backend["runner"].spaces()
+        assert infos
+        names = [i.name for i in infos]
+        assert len(set(names)) == len(names)
+        for i in infos:
+            assert i.kind in ("cache", "scratchpad", "memory")
+            assert i.max_bytes > 0
+
+
+class TestPChase:
+    def test_sample_shape_and_domain(self, backend):
+        info, ab = _probe_space(backend["runner"])
+        out = np.asarray(backend["runner"].pchase(info.name, ab, 32, 7))
+        assert out.shape == (7,)
+        assert out.dtype.kind == "f"
+        assert np.all(np.isfinite(out)) and np.all(out > 0)
+
+    def test_batch_equals_loop(self, backend):
+        runner = backend["runner"]
+        info, ab = _probe_space(runner)
+        sizes = [ab, ab * 2, ab * 3]
+        batch = np.asarray(runner.pchase_batch(info.name, sizes, 32, 7))
+        assert batch.shape == (3, 7)
+        assert np.all(np.isfinite(batch)) and np.all(batch > 0)
+        if runner.deterministic:
+            for i, size in enumerate(sizes):
+                assert np.array_equal(
+                    batch[i], runner.pchase(info.name, size, 32, 7))
+
+
+class TestColdChase:
+    def test_supported_spaces_serve_per_load_rows(self, backend):
+        runner = backend["runner"]
+        cold = [i for i in runner.spaces() if i.supports_cold]
+        if not cold:
+            pytest.skip("backend advertises no cold-pass space")
+        info = cold[0]
+        out = np.asarray(runner.cold_chase(info.name, 64 * KIB, 32, 65))
+        assert out.ndim == 1 and out.size > 0
+        assert np.all(np.isfinite(out)) and np.all(out > 0)
+
+    def test_batch_equals_loop(self, backend):
+        runner = backend["runner"]
+        cold = [i for i in runner.spaces() if i.supports_cold]
+        if not cold:
+            pytest.skip("backend advertises no cold-pass space")
+        info = cold[0]
+        strides = [8, 32, 64]
+        arrs = [max(64 * KIB, s * 65) for s in strides]
+        batch = np.asarray(runner.cold_chase_batch(info.name, arrs, strides,
+                                                   64))
+        assert batch.shape[0] == 3
+        assert np.all(np.isfinite(batch)) and np.all(batch > 0)
+        if runner.deterministic:
+            for i, (ab, s) in enumerate(zip(arrs, strides)):
+                assert np.array_equal(
+                    batch[i], runner.cold_chase(info.name, ab, s, 64))
+
+    def test_capability_flag_respected(self, backend):
+        """Spaces without cold-pass support must be refused by measuring
+        runners — the engine relies on the flag, and a silent wrong answer
+        would be worse than the exception."""
+        runner = backend["runner"]
+        uncold = [i for i in runner.spaces() if not i.supports_cold]
+        if not (uncold and backend["cold_unsupported_raises"]):
+            pytest.skip("no refusing space on this backend")
+        with pytest.raises(NotImplementedError):
+            runner.cold_chase(uncold[0].name, 64 * KIB, 32, 65)
+
+
+class TestEvictionProbes:
+    def test_amount_probe_or_refusal(self, backend):
+        runner = backend["runner"]
+        amount = [i for i in runner.spaces() if i.supports_amount]
+        if amount:
+            info = amount[0]
+            ab = int(info.max_bytes // 8 * 0.9)
+            out = np.asarray(runner.amount_probe(info.name, 0, 1, ab, 7))
+            assert out.shape == (7,) and np.all(out > 0)
+        else:
+            with pytest.raises(NotImplementedError):
+                runner.amount_probe("anything", 0, 1, 4 * KIB, 7)
+
+    def test_sharing_probe_or_refusal(self, backend):
+        runner = backend["runner"]
+        sharing = [i for i in runner.spaces() if i.supports_sharing]
+        if sharing:
+            info = sharing[0]
+            ab = int(info.max_bytes // 8 * 0.9)
+            out = np.asarray(
+                runner.sharing_probe(info.name, info.name, ab, 7))
+            assert out.shape == (7,) and np.all(out > 0)
+        else:
+            with pytest.raises(NotImplementedError):
+                runner.sharing_probe("a", "b", 4 * KIB, 7)
+
+
+class TestBandwidth:
+    def test_read_write_positive(self, backend):
+        runner = backend["runner"]
+        for mode in ("read", "write"):
+            bw = runner.bandwidth(backend["bw_space"], mode)
+            assert isinstance(bw, float) and bw > 0
+
+
+class TestRegistryHonorsFlags:
+    """The engine side of the capability contract: families never scheduled
+    for spaces that do not support them, for every backend's spaces."""
+
+    def test_cold_families_gated(self, backend):
+        for info in backend["runner"].spaces():
+            families = {s.family for s in space_probe_specs(info)}
+            if not info.supports_cold:
+                assert "fetch_granularity" not in families
+                assert "line_size" not in families
+            else:
+                assert "fetch_granularity" in families
+            if not (info.supports_amount or info.scope == "chip"):
+                assert "amount" not in families
+
+
+class TestPermutations:
+    def test_random_cycle_is_single_cycle(self):
+        rng = np.random.default_rng(0)
+        for n in (2, 5, 64, 1000):
+            perm = random_cycle(n, rng)
+            seen, cur = set(), 0
+            for _ in range(n):
+                cur = int(perm[cur])
+                assert cur not in seen
+                seen.add(cur)
+            assert cur == 0 and len(seen) == n
+
+    def test_matches_sattolo_distribution_property(self):
+        # Both constructions produce permutations with exactly one cycle.
+        rng = np.random.default_rng(1)
+        for n in (8, 33):
+            for perm in (sattolo_cycle(n, rng), random_cycle(n, rng)):
+                visited = set()
+                cur = 0
+                while cur not in visited:
+                    visited.add(cur)
+                    cur = int(perm[cur])
+                assert len(visited) == n
