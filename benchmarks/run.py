@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows (assignment deliverable (d)).
   kernels            — Pallas kernels vs refs (correctness + ref wall time)
   train_step         — tiny end-to-end train step wall time
   topology_query     — cold discovery vs warm store hit vs batched queries
+  adaptive_speedup   — probe rows: adaptive sweep planner vs dense sweeps
+                       (discrete attributes must be identical)
   pallas_interp      — third-backend discovery through the real Pallas
                        kernels (interpret mode) vs configured ground truth
 
@@ -125,14 +127,17 @@ def bench_runtime_breakdown() -> None:
 
 
 def bench_engine_speedup() -> None:
-    """Engine vs legacy discovery wall time (the PR's headline: the batched
-    probe engine must run the same discovery >= 2x faster).  Summed over the
-    two validation devices; topologies are checked equivalent first — a
-    speedup over different answers would be meaningless.  'Identical' means
-    the ROADMAP-prescribed contract: discrete attributes exactly equal,
-    floats within rel-tol (vectorized stats don't promise summation order)."""
-    from repro.core import (discover_sim, discover_sim_legacy, make_h100_like,
-                            make_mi210_like, topology_equivalent)
+    """Engine vs legacy discovery wall time (the engine's headline row —
+    since ISSUE 4, the engine side runs the adaptive sweep planner, so the
+    gate floor moved from 2x to 3x).  Summed over the two validation
+    devices; topologies are checked equivalent first — a speedup over
+    different answers would be meaningless.  'Identical' means the
+    ROADMAP-prescribed contract: discrete attributes exactly equal, floats
+    within rel-tol, confidence excluded (the planner computes it from a
+    boundary window instead of the full sweep series)."""
+    from repro.core import (SweepBudget, discover_sim, discover_sim_legacy,
+                            make_h100_like, make_mi210_like,
+                            topology_equivalent)
 
     legacy_s = engine_s = 0.0
     identical = True
@@ -147,15 +152,44 @@ def bench_engine_speedup() -> None:
             legacy_best = min(legacy_best, time.perf_counter() - t0)
             t0 = time.perf_counter()
             topo_e, _ = discover_sim(make(seed=48), n_samples=17,
-                                     max_workers=0)
+                                     max_workers=0, budget=SweepBudget())
             engine_best = min(engine_best, time.perf_counter() - t0)
         legacy_s += legacy_best
         engine_s += engine_best
-        if not topology_equivalent(topo_l, topo_e, rel_tol=1e-6):
+        if not topology_equivalent(topo_l, topo_e, rel_tol=1e-6,
+                                   compare_confidence=False):
             identical = False
     row("engine_speedup", engine_s * 1e6,
         f"legacy={legacy_s*1e6:.0f}us_speedup={legacy_s/engine_s:.2f}x_"
         f"identical={identical}")
+
+
+def bench_adaptive_speedup() -> None:
+    """ISSUE 4 tentpole row: probe volume of the adaptive planner vs the
+    dense sweeps, same devices, same seeds.  ``identical`` (hard-gated) is
+    the planner-vs-dense oracle contract — every discrete attribute equal,
+    floats within rel-tol, confidence excluded; ``row_ratio`` (ratio-gated)
+    is rows_dense / rows_planned, the probe-volume cut every backend
+    inherits."""
+    from repro.core import (SweepBudget, discover_sim, make_h100_like,
+                            make_mi210_like, topology_equivalent)
+
+    rows_dense = rows_planned = 0
+    identical = True
+    t0 = time.perf_counter()
+    for make in (make_h100_like, make_mi210_like):
+        topo_d, td = discover_sim(make(seed=48), n_samples=17, max_workers=0)
+        topo_p, tp = discover_sim(make(seed=48), n_samples=17, max_workers=0,
+                                  budget=SweepBudget())
+        rows_dense += td.probe_rows
+        rows_planned += tp.probe_rows
+        if not topology_equivalent(topo_d, topo_p, rel_tol=1e-6,
+                                   compare_confidence=False):
+            identical = False
+    us = (time.perf_counter() - t0) * 1e6
+    row("adaptive_speedup", us,
+        f"rows_dense={rows_dense}_rows_planned={rows_planned}_"
+        f"row_ratio={rows_dense/rows_planned:.2f}x_identical={identical}")
 
 
 def bench_pallas_interp() -> None:
@@ -166,42 +200,60 @@ def bench_pallas_interp() -> None:
     spaces exact, <=64 B sweep-grid quantization on the word-granular
     scratchpad), and a second store-backed discovery must be a pure hit
     returning the identical document.  Wall time is warn-only — interpret
-    mode characterizes this container, not a TPU."""
+    mode characterizes this container, not a TPU.
+
+    One retry on a discrete mismatch: probes here are *real timed
+    measurements* on a shared box, and a sustained steal burst can defeat
+    even the drift-hardened detection (a few-percent tail).  A genuine
+    regression fails deterministically on both attempts; independent
+    drift flukes square away.  Retries are reported in the derived field.
+    """
     import tempfile
 
     from repro.core import discover_pallas
     from repro.core.engine.store import TopologyStore
     from repro.core.probes import PallasRunner, make_pallas_model
 
-    with tempfile.TemporaryDirectory() as td:
-        store = TopologyStore(td)
-        model = make_pallas_model()
-        runner = PallasRunner(model)
-        t0 = time.perf_counter()
-        topo, _ = discover_pallas(runner=runner, n_samples=9, store=store)
-        cold_s = time.perf_counter() - t0
+    def attempt():
+        with tempfile.TemporaryDirectory() as td:
+            store = TopologyStore(td)
+            model = make_pallas_model()
+            runner = PallasRunner(model)
+            t0 = time.perf_counter()
+            topo, _ = discover_pallas(runner=runner, n_samples=9, store=store)
+            cold_s = time.perf_counter() - t0
 
-        gt = model.ground_truth()
-        ok = True
-        for name in ("L1", "L2"):
-            me = topo.find_memory(name)
-            ok = ok and me is not None \
-                and me.get("size") == gt[name]["size"] \
-                and me.get("line_size") == gt[name]["line_size"] \
-                and me.get("fetch_granularity") == gt[name]["fetch_granularity"]
-        vmem = topo.find_memory("VMEM")
-        ok = ok and vmem is not None and vmem.get("size") is not None \
-            and abs(vmem.get("size") - gt["VMEM"]["size"]) <= 64
+            gt = model.ground_truth()
+            ok = True
+            for name in ("L1", "L2"):
+                me = topo.find_memory(name)
+                ok = ok and me is not None \
+                    and me.get("size") == gt[name]["size"] \
+                    and me.get("line_size") == gt[name]["line_size"] \
+                    and me.get("fetch_granularity") == gt[name][
+                        "fetch_granularity"]
+            vmem = topo.find_memory("VMEM")
+            ok = ok and vmem is not None and vmem.get("size") is not None \
+                and abs(vmem.get("size") - gt["VMEM"]["size"]) <= 64
 
-        calls = runner.kernel_calls
-        t0 = time.perf_counter()
-        topo_hit, _ = discover_pallas(runner=runner, n_samples=9, store=store)
-        hit_s = max(time.perf_counter() - t0, 1e-9)
-        served = (topo_hit.to_json() == topo.to_json()
-                  and runner.kernel_calls == calls)
-        row("pallas_interp", cold_s * 1e6,
-            f"discrete_ok={bool(ok)}_store_hit={bool(served)}_"
-            f"warm_speedup={cold_s/hit_s:.1f}x_kernel_calls={calls}")
+            calls = runner.kernel_calls
+            t0 = time.perf_counter()
+            topo_hit, _ = discover_pallas(runner=runner, n_samples=9,
+                                          store=store)
+            hit_s = max(time.perf_counter() - t0, 1e-9)
+            served = (topo_hit.to_json() == topo.to_json()
+                      and runner.kernel_calls == calls)
+            return bool(ok), bool(served), cold_s, hit_s, calls
+
+    ok, served, cold_s, hit_s, calls = attempt()
+    retried = False
+    if not (ok and served):
+        retried = True
+        ok, served, cold_s, hit_s, calls = attempt()
+    row("pallas_interp", cold_s * 1e6,
+        f"discrete_ok={ok}_store_hit={served}_"
+        f"warm_speedup={cold_s/hit_s:.1f}x_kernel_calls={calls}_"
+        f"retried={retried}")
 
 
 def bench_fig5_stream() -> None:
@@ -370,8 +422,8 @@ def bench_train_step() -> None:
 
 ALL_BENCHES = (bench_table1_coverage, bench_table3_validation,
                bench_fig2_reduction, bench_runtime_breakdown,
-               bench_engine_speedup, bench_topology_query,
-               bench_pallas_interp, bench_fig5_stream,
+               bench_engine_speedup, bench_adaptive_speedup,
+               bench_topology_query, bench_pallas_interp, bench_fig5_stream,
                bench_perfmodel, bench_link_adjacency, bench_roofline,
                bench_kernels, bench_train_step)
 
@@ -383,8 +435,10 @@ def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", action="store_true",
                     help="emit a JSON array of rows on stdout instead of CSV")
-    ap.add_argument("--out", default=None,
-                    help="also write the JSON rows to this file")
+    ap.add_argument("--out", default="bench_current.json",
+                    help="also write the JSON rows to this file (default "
+                         "bench_current.json — a git-ignored generated "
+                         "artifact; pass --out '' to skip writing)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names "
                          "(e.g. engine_speedup,topology_query)")

@@ -32,6 +32,14 @@ def main() -> None:
                          "(read-through/write-through)")
     ap.add_argument("--refresh", action="store_true",
                     help="with --store: re-measure even on a stored hit")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive coarse-to-fine sweeps (SweepBudget "
+                         "defaults) instead of dense sweeps; identical "
+                         "discrete attributes, a fraction of the probes "
+                         "(the Pallas backend plans by default)")
+    ap.add_argument("--gc-max-entries", type=int, default=None,
+                    help="with --store: retention sweep after persisting "
+                         "(keep at most N newest topologies)")
     ap.add_argument("-j", "--json-out", default=None)
     ap.add_argument("-p", "--markdown", action="store_true")
     args = ap.parse_args()
@@ -40,19 +48,30 @@ def main() -> None:
     if args.store:
         from repro.core.engine.store import TopologyStore
         store = TopologyStore(args.store)
+    gc_policy = None
+    if args.gc_max_entries is not None:
+        from repro.core import GcPolicy
+        gc_policy = GcPolicy(max_entries=args.gc_max_entries)
+    budget = None
+    if args.adaptive:
+        from repro.core import SweepBudget
+        budget = SweepBudget()
 
     if args.device == "host":
         topo, timings = discover_host(quick=args.quick, store=store,
-                                      refresh=args.refresh)
+                                      refresh=args.refresh,
+                                      gc_policy=gc_policy)
     elif args.device == "pallas":
         topo, timings = discover_pallas(n_samples=min(args.samples, 9),
                                         elements=args.elements, store=store,
-                                        refresh=args.refresh)
+                                        refresh=args.refresh,
+                                        gc_policy=gc_policy)
     else:
         dev = SIM_DEVICES[args.device](seed=0)
         topo, timings = discover_sim(dev, n_samples=args.samples,
                                      elements=args.elements, store=store,
-                                     refresh=args.refresh)
+                                     refresh=args.refresh, budget=budget,
+                                     gc_policy=gc_policy)
     if store is not None:
         print(f"# store: {store.stats()}", file=sys.stderr)
 

@@ -9,6 +9,8 @@ from .simulate import (SIM_DEVICES, SimDevice, SimLevel, make_h100_like,
 from .discover import (DiscoveryRequest, DiscoveryTimings, discover,
                        discover_host, discover_pallas, discover_sim,
                        discover_sim_legacy, spec_from_topology)
+from .engine.planner import SweepBudget
+from .engine.store import GcPolicy
 
 __all__ = [
     "Attribute", "ComputeElement", "Link", "MemoryElement", "Topology",
@@ -18,5 +20,5 @@ __all__ = [
     "make_mi210_like", "make_v5e_like",
     "DiscoveryRequest", "DiscoveryTimings", "discover", "discover_host",
     "discover_pallas", "discover_sim", "discover_sim_legacy",
-    "spec_from_topology",
+    "spec_from_topology", "SweepBudget", "GcPolicy",
 ]

@@ -49,7 +49,7 @@ from .topology import (PROVENANCE_API, PROVENANCE_BENCHMARK, ComputeElement,
 
 __all__ = ["DiscoveryTimings", "DiscoveryRequest", "discover",
            "discover_sim", "discover_sim_legacy", "discover_host",
-           "discover_pallas", "spec_from_topology",
+           "discover_pallas", "spec_from_topology", "default_sweep_budget",
            "sim_request_descriptor", "host_request_descriptor",
            "pallas_request_descriptor"]
 
@@ -59,6 +59,10 @@ KIB = 1024
 @dataclass
 class DiscoveryTimings:
     per_family: dict[str, float] = field(default_factory=dict)
+    # Probe-volume diagnostics for the run (cache hits/misses, fusion round
+    # count, planner mode).  Not persisted — a store hit reconstructs only
+    # the per-family timings, since no probes ran.
+    meta: dict = field(default_factory=dict)
 
     def add(self, family: str, seconds: float) -> None:
         self.per_family[family] = self.per_family.get(family, 0.0) + seconds
@@ -66,6 +70,13 @@ class DiscoveryTimings:
     @property
     def total(self) -> float:
         return sum(self.per_family.values())
+
+    @property
+    def probe_rows(self) -> int | None:
+        """Grid rows actually sampled (cache misses) — the probe volume the
+        adaptive planner minimizes; None when unknown (store hit, legacy)."""
+        cache = self.meta.get("cache")
+        return None if cache is None else int(cache["misses"])
 
 
 class _Timer:
@@ -84,15 +95,34 @@ class _Timer:
 # --------------------------------------------------------------------------
 # Request descriptors (content addresses for the TopologyStore)
 # --------------------------------------------------------------------------
+# Default sweep budget for backends that plan adaptively out of the box
+# (Pallas).  Exposed so request descriptors computed by callers match the
+# ones discovery uses internally.
+def default_sweep_budget():
+    from .engine.planner import SweepBudget
+
+    return SweepBudget()
+
+
+_DEFAULT_BUDGET = object()       # sentinel: "the backend's default budget"
+
+
+def _budget_descriptor(budget) -> dict | None:
+    return None if budget is None else budget.descriptor()
+
+
 def sim_request_descriptor(device, n_samples: int,
-                           elements: list[str] | None) -> dict:
+                           elements: list[str] | None, budget=None) -> dict:
     """Everything that determines a ``discover_sim`` result — and nothing
-    that does not.  Worker count, engine-vs-legacy, and batching are
-    excluded: request-keyed sample streams make them result-invisible up to
-    the ``topology_equivalent`` contract (discrete attributes exact, floats
-    within rel-tol — and bit-identical in practice on the validation
-    devices), so the key addresses that equivalence class."""
-    return {
+    that does not.  Worker count, engine-vs-legacy, batching, and fusion
+    are excluded: request-keyed sample streams make them result-invisible
+    up to the ``topology_equivalent`` contract (discrete attributes exact,
+    floats within rel-tol — and bit-identical in practice on the validation
+    devices), so the key addresses that equivalence class.  A ``budget``
+    IS part of the key (planned confidence metrics come from a window, not
+    the full series); ``budget=None`` keys exactly as before, so existing
+    stores stay valid."""
+    d = {
         "kind": "discover_sim",
         "backend": f"simulated:{device.name}",
         "device": device.name,
@@ -101,6 +131,9 @@ def sim_request_descriptor(device, n_samples: int,
         "n_samples": int(n_samples),
         "elements": sorted(elements) if elements else None,
     }
+    if budget is not None:
+        d["budget"] = _budget_descriptor(budget)
+    return d
 
 
 def host_request_descriptor(max_bytes: int, n_samples: int,
@@ -110,14 +143,19 @@ def host_request_descriptor(max_bytes: int, n_samples: int,
 
 
 def pallas_request_descriptor(model, n_samples: int,
-                              elements: list[str] | None) -> dict:
+                              elements: list[str] | None,
+                              budget=_DEFAULT_BUDGET) -> dict:
     """Content address of a ``discover_pallas`` request.
 
     Keyed like the sim descriptor — model identity + seed + sample count +
-    element restriction — so Pallas topologies are stored/served through
-    the same ``TopologyStore`` machinery as sim/host ones.  Measured values
-    vary run to run (real timings); the *request* is what is addressed.
+    element restriction + sweep budget — so Pallas topologies are stored/
+    served through the same ``TopologyStore`` machinery as sim/host ones.
+    Measured values vary run to run (real timings); the *request* is what
+    is addressed.  The budget defaults to the backend's default
+    (``SweepBudget()``), matching ``discover_pallas``.
     """
+    if budget is _DEFAULT_BUDGET:
+        budget = default_sweep_budget()
     return {
         "kind": "discover_pallas",
         "backend": f"pallas-interp:{model.name}",
@@ -126,6 +164,7 @@ def pallas_request_descriptor(model, n_samples: int,
         "seed": model.seed,
         "n_samples": int(n_samples),
         "elements": sorted(elements) if elements else None,
+        "budget": _budget_descriptor(budget),
     }
 
 
@@ -188,12 +227,20 @@ class DiscoveryRequest:
     # sound only for runners whose sample streams are request-keyed (sim);
     # measuring backends (host, pallas) must re-measure instead.
     preload_samples: bool = True
+    # Adaptive sweep planning (engine/planner.SweepBudget): None keeps the
+    # dense sweeps — the equivalence oracle.  The budget must already be
+    # reflected in ``descriptor`` (the wrappers handle this).
+    budget: object | None = None
+    # Cross-family batch fusion (engine/fusion.py): coalesce concurrently
+    # ready probe rounds into single batched dispatches.  Kernel execution
+    # stays serial, so it composes with timing-sensitive backends.
+    fuse: bool = False
     plan: Callable[[object], list] | None = None
     assemble: Callable[[object, DiscoveryTimings], Topology] | None = None
 
 
 def discover(request: DiscoveryRequest, *, store=None, refresh: bool = False,
-             ) -> tuple[Topology, DiscoveryTimings]:
+             gc_policy=None) -> tuple[Topology, DiscoveryTimings]:
     """Run one discovery request end to end (the backend-neutral core).
 
     ``store`` (a ``TopologyStore``) makes discovery read-through/write-
@@ -201,6 +248,11 @@ def discover(request: DiscoveryRequest, *, store=None, refresh: bool = False,
     request is returned without issuing a single runner probe, and a fresh
     run persists both the topology and the engine's sample cache.
     ``refresh=True`` skips the read (re-measures) but still writes through.
+
+    ``gc_policy`` (a ``store.GcPolicy``) opts the write path into a
+    retention sweep: after persisting, the oldest entries beyond the
+    policy's ceilings are evicted (topology + samples pairs, under the
+    store lock).  Ignored without a ``store``.
     """
     from .engine import SampleCache, run_probes
     from .engine.cache import CachingRunner
@@ -232,18 +284,25 @@ def discover(request: DiscoveryRequest, *, store=None, refresh: bool = False,
                          elements=request.elements,
                          device_families=request.device_families,
                          max_workers=request.max_workers, timings=timings,
-                         cache=cache)
+                         cache=cache, budget=request.budget,
+                         fuse=request.fuse)
+        timings.meta["cache"] = eng.cache_stats
+        timings.meta["planned"] = request.budget is not None
         topo = _assemble_engine_topology(request, runner, eng, timings)
     else:
         cached = CachingRunner(runner, cache=cache)
         sched = run_work_items(request.plan(cached),
                                max_workers=request.max_workers,
                                timings=timings)
+        timings.meta["cache"] = cached.cache.stats()
         topo = request.assemble(sched, timings)
 
     if store is not None:
         _store_persist(store, key, request.descriptor, topo, timings,
                        cache=cache)
+        if gc_policy is not None:
+            store.gc(max_entries=gc_policy.max_entries,
+                     max_age_s=gc_policy.max_age_s)
     return topo, timings
 
 
@@ -366,16 +425,24 @@ def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
 def discover_sim(device, n_samples: int = 33,
                  elements: list[str] | None = None, *,
                  engine: bool = True, max_workers: int | None = None,
-                 store=None, refresh: bool = False,
+                 store=None, refresh: bool = False, budget=None,
+                 fuse: bool = False, gc_policy=None,
                  ) -> tuple[Topology, DiscoveryTimings]:
     """Full MT4G-style discovery of a simulated device.
 
     ``engine=True`` (default) routes through the unified driver and the
     batched probe engine; ``engine=False`` runs the legacy sequential loop.
     Both produce the same topology for a fixed device seed.  ``store`` /
-    ``refresh`` behave as documented on ``discover()``.
+    ``refresh`` / ``gc_policy`` behave as documented on ``discover()``.
+
+    ``budget`` (a ``SweepBudget``) turns on the adaptive sweep planner —
+    identical discrete attributes, confidence metrics from a boundary
+    window instead of the full sweep series, ~3-5x fewer probed rows.
+    The default stays dense: the sim backend is the validation oracle.
+    ``fuse=True`` coalesces concurrently ready probe rounds into single
+    batched dispatches (a wall-clock win on dispatch-bound runners).
     """
-    descriptor = sim_request_descriptor(device, n_samples, elements)
+    descriptor = sim_request_descriptor(device, n_samples, elements, budget)
 
     if not engine:
         key = None
@@ -406,8 +473,10 @@ def discover_sim(device, n_samples: int = 33,
         device_families=tuple(device_families),
         max_workers=max_workers,
         preload_samples=True,           # request-keyed streams: sound
+        budget=budget, fuse=fuse,
     )
-    return discover(request, store=store, refresh=refresh)
+    return discover(request, store=store, refresh=refresh,
+                    gc_policy=gc_policy)
 
 
 # --------------------------------------------------------------------------
@@ -417,7 +486,8 @@ def discover_pallas(model=None, n_samples: int = 9,
                     elements: list[str] | None = None, *,
                     runner=None, max_workers: int | None = 0,
                     store=None, refresh: bool = False,
-                    ) -> tuple[Topology, DiscoveryTimings]:
+                    budget=_DEFAULT_BUDGET, fuse: bool = True,
+                    gc_policy=None) -> tuple[Topology, DiscoveryTimings]:
     """Discovery through the real Pallas probe kernels (third backend).
 
     Same engine, same registry, same statistics as ``discover_sim`` — the
@@ -426,15 +496,24 @@ def discover_pallas(model=None, n_samples: int = 9,
     hierarchy (default ``make_pallas_model()``); pass ``runner`` to reuse a
     warmed ``PallasRunner`` (compiled kernels) across discoveries.
 
-    Probes are timing measurements, so the schedule stays inline
-    (``max_workers=0``) by default — co-running kernels would perturb each
-    other's wall clocks — and persisted samples are never preloaded (a
-    re-measure is a re-measure).  Topologies are content-addressed in the
-    ``TopologyStore`` by ``pallas_request_descriptor`` and served through
-    ``TopologyService`` exactly like sim/host ones.
+    Kernel launches are the dominant cost of this backend (a timed
+    dispatch plus its calibration twin per sample), so it defaults to the
+    probe-volume optimizers: the adaptive sweep planner
+    (``budget=SweepBudget()``; pass ``budget=None`` to force dense sweeps)
+    and cross-family batch fusion (``fuse=True``), which coalesces every
+    concurrently ready probe round onto one ``pchase_many`` /
+    ``cold_chase_many`` grid launch.  Fused rounds are *executed serially
+    by the coordinator*, preserving the no-co-running-kernels guarantee
+    the inline schedule (``max_workers=0``) provides in unfused mode.
+    Persisted samples are never preloaded (a re-measure is a re-measure).
+    Topologies are content-addressed in the ``TopologyStore`` by
+    ``pallas_request_descriptor`` and served through ``TopologyService``
+    exactly like sim/host ones.
     """
     from .probes.pallas_runner import PallasRunner, make_pallas_model
 
+    if budget is _DEFAULT_BUDGET:
+        budget = default_sweep_budget()
     if runner is not None:
         model = runner.model
     elif model is None:
@@ -446,7 +525,8 @@ def discover_pallas(model=None, n_samples: int = 9,
         device_families.insert(1, "cu_sharing")
 
     request = DiscoveryRequest(
-        descriptor=pallas_request_descriptor(model, n_samples, elements),
+        descriptor=pallas_request_descriptor(model, n_samples, elements,
+                                             budget),
         vendor=model.vendor, model=model.name,
         backend=f"pallas-interp:{model.name}",
         make_runner=(lambda: runner) if runner is not None
@@ -456,8 +536,10 @@ def discover_pallas(model=None, n_samples: int = 9,
         max_workers=max_workers,
         clock_domain="interp-cycles",   # chain-length units, timed end-to-end
         preload_samples=False,          # real measurements: always re-measure
+        budget=budget, fuse=fuse,
     )
-    return discover(request, store=store, refresh=refresh)
+    return discover(request, store=store, refresh=refresh,
+                    gc_policy=gc_policy)
 
 
 # --------------------------------------------------------------------------
@@ -465,7 +547,7 @@ def discover_pallas(model=None, n_samples: int = 9,
 # --------------------------------------------------------------------------
 def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
                   quick: bool = True, *, store=None, refresh: bool = False,
-                  ) -> tuple[Topology, DiscoveryTimings]:
+                  gc_policy=None) -> tuple[Topology, DiscoveryTimings]:
     """Live discovery of this machine's CPU hierarchy (real measurements).
 
     The host hierarchy has one probeable space, so instead of the registry
@@ -536,7 +618,8 @@ def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
         preload_samples=False,          # real measurements: always re-measure
         plan=plan, assemble=assemble,
     )
-    return discover(request, store=store, refresh=refresh)
+    return discover(request, store=store, refresh=refresh,
+                    gc_policy=gc_policy)
 
 
 # --------------------------------------------------------------------------

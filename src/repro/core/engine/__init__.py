@@ -8,16 +8,21 @@ for the driver that assembles a ``Topology`` from it.
 """
 from .cache import CachingRunner, SampleCache
 from .engine import DEVICE_KEY, EngineResult, run_probes
+from .fusion import FusionDispatcher, run_fused
+from .planner import SweepBudget
 from .registry import (DEVICE_FAMILIES, SPACE_FAMILIES, ProbeContext,
                        ProbeSpec, device_probe_specs, space_probe_specs)
 from .scheduler import ScheduleResult, WorkItem, run_work_items
-from .store import StoredTopology, StoreLock, TopologyStore, request_key
+from .store import (GcPolicy, StoredTopology, StoreLock, TopologyStore,
+                    request_key)
 
 __all__ = [
     "CachingRunner", "SampleCache",
     "DEVICE_KEY", "EngineResult", "run_probes",
+    "FusionDispatcher", "run_fused", "SweepBudget",
     "DEVICE_FAMILIES", "SPACE_FAMILIES", "ProbeContext", "ProbeSpec",
     "device_probe_specs", "space_probe_specs",
     "ScheduleResult", "WorkItem", "run_work_items",
-    "StoredTopology", "StoreLock", "TopologyStore", "request_key",
+    "GcPolicy", "StoredTopology", "StoreLock", "TopologyStore",
+    "request_key",
 ]

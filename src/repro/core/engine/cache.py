@@ -119,6 +119,81 @@ class CachingRunner:
                 self.cache.hits += len(rows) - len(missing)
         return np.stack(rows)
 
+    def pchase_many(self, requests, n_samples, fresh: bool = False):
+        """Heterogeneous fused batch (per-row space/size/stride): cached rows
+        served, duplicates folded, the rest fetched in ONE base call.
+
+        This is the call the fusion dispatcher lands coalesced rounds on —
+        several probe families' pending rows arrive as one request list, so
+        dedup matters: two families asking for the same reference
+        distribution must cost one probe.
+
+        ``fresh=True`` bypasses cache *serving* (results still overwrite
+        the cache): measuring runners need it when a row set must share one
+        launch's clock — e.g. the boundary window the change-point scan
+        runs over — instead of mixing rows recorded at different drift
+        levels.  Request-keyed runners return identical values either way.
+        """
+        reqs = [(space, int(ab), int(stride))
+                for space, ab, stride in requests]
+        keys = [("pchase", space, ab, stride, int(n_samples))
+                for space, ab, stride in reqs]
+        if fresh:
+            many = getattr(self.base, "pchase_many", None)
+            if many is not None:           # base runners measure fresh always
+                rows = np.asarray(many(reqs, n_samples))
+            else:
+                rows = np.stack([self.base.pchase(r[0], r[1], r[2], n_samples)
+                                 for r in reqs])
+            with self.cache._lock:
+                for key, row in zip(keys, rows):
+                    self.cache.misses += 1
+                    self.cache._store[key] = row
+            return rows
+        return self._serve_many(
+            keys, reqs, n_samples,
+            many=getattr(self.base, "pchase_many", None),
+            single=lambda r: self.base.pchase(r[0], r[1], r[2], n_samples))
+
+    def cold_chase_many(self, requests, n_samples):
+        """Cold-pass twin of ``pchase_many`` (per-row spaces and strides)."""
+        reqs = [(space, int(ab), int(stride))
+                for space, ab, stride in requests]
+        keys = [("cold", space, ab, stride, int(n_samples))
+                for space, ab, stride in reqs]
+        return self._serve_many(
+            keys, reqs, n_samples,
+            many=getattr(self.base, "cold_chase_many", None),
+            single=lambda r: self.base.cold_chase(r[0], r[1], r[2],
+                                                  n_samples))
+
+    def _serve_many(self, keys, reqs, n_samples, many, single):
+        """Shared fused-batch cache logic: peek, dedupe, one base call."""
+        rows: list[np.ndarray | None] = [self.cache.peek(k) for k in keys]
+        missing_keys: dict[tuple, list[int]] = {}
+        for i, r in enumerate(rows):
+            if r is None:
+                missing_keys.setdefault(keys[i], []).append(i)
+        if missing_keys:
+            uniq = list(missing_keys)
+            uniq_reqs = [reqs[positions[0]]
+                         for positions in missing_keys.values()]
+            if many is not None:
+                fetched = np.asarray(many(uniq_reqs, n_samples))
+            else:
+                fetched = np.stack([single(r) for r in uniq_reqs])
+            with self.cache._lock:
+                for j, key in enumerate(uniq):
+                    self.cache.misses += 1
+                    self.cache._store[key] = fetched[j]
+                    for i in missing_keys[key]:
+                        rows[i] = fetched[j]
+        served = len(rows) - sum(len(v) for v in missing_keys.values())
+        if served:
+            with self.cache._lock:
+                self.cache.hits += served
+        return np.stack(rows)
+
     def cold_chase(self, space, array_bytes, stride, n_samples):
         key = ("cold", space, int(array_bytes), int(stride), int(n_samples))
         return self.cache.get_or_run(
@@ -208,3 +283,9 @@ class CachingRunner:
     @property
     def cores_per_sm(self) -> int:
         return getattr(self.base, "cores_per_sm", 1)
+
+    @property
+    def deterministic(self) -> bool:
+        """Whether repeated requests return bit-identical samples (the
+        base runner's contract — caching doesn't change it)."""
+        return getattr(self.base, "deterministic", False)

@@ -36,28 +36,45 @@ class EngineResult:
 def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
                *, device_families: tuple[str, ...] = (),
                max_workers: int | None = None, timings=None,
-               cache: SampleCache | None = None) -> EngineResult:
+               cache: SampleCache | None = None, budget=None,
+               fuse: bool = False) -> EngineResult:
     """Run the full registry against ``runner`` through the engine.
 
     ``device_families`` selects which device-scoped families to schedule
     (drivers gate e.g. ``cu_sharing`` on the device actually having CU
     groups, mirroring the legacy flow).
+
+    ``budget`` (a ``planner.SweepBudget``) switches sweep-heavy families to
+    the adaptive coarse-to-fine planner — identical discrete attributes,
+    ~4-8x fewer probed rows.  ``fuse=True`` runs the schedule through the
+    cross-family fusion dispatcher: concurrently ready items coalesce their
+    probe rounds into single ``pchase_many``/``cold_chase_many`` dispatches
+    (``max_workers`` is ignored in fused mode).
     """
     cached = CachingRunner(runner, cache=cache)
+    dispatcher = None
+    probe_runner = cached
+    if fuse:
+        from .fusion import FusionDispatcher
+
+        dispatcher = FusionDispatcher(cached)
+        probe_runner = dispatcher.proxy()
     infos = [i for i in cached.spaces()
              if not elements or i.name in elements]
 
     space_results: dict[str, dict] = {i.name: {} for i in infos}
-    shared_ctx = ProbeContext(runner=cached, n_samples=n_samples,
-                              all_results=space_results, infos=infos)
+    shared_ctx = ProbeContext(runner=probe_runner, n_samples=n_samples,
+                              all_results=space_results, infos=infos,
+                              budget=budget)
 
     items: list[WorkItem] = []
     scheduled: set[tuple[str, str]] = set()
 
     def make_space_item(info, spec, deps):
-        ctx = ProbeContext(runner=cached, n_samples=n_samples, info=info,
-                           results=space_results[info.name],
-                           all_results=space_results, infos=infos)
+        ctx = ProbeContext(runner=probe_runner, n_samples=n_samples,
+                           info=info, results=space_results[info.name],
+                           all_results=space_results, infos=infos,
+                           budget=budget)
 
         def fn(_results, spec=spec, ctx=ctx, name=info.name):
             value = spec.run(ctx)
@@ -92,7 +109,8 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
         items.append(WorkItem(key=(DEVICE_KEY, spec.family), fn=fn,
                               deps=deps, family=bucket))
 
-    sched = run_work_items(items, max_workers=max_workers, timings=timings)
+    sched = run_work_items(items, max_workers=max_workers, timings=timings,
+                           fuser=dispatcher)
 
     device_results = {fam: sched.results[(DEVICE_KEY, fam)]
                       for fam in device_families

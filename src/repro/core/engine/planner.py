@@ -1,0 +1,435 @@
+"""Adaptive coarse-to-fine sweep planner (the probe-volume optimizer).
+
+MT4G's reliability comes from statistical change-point detection over
+microbenchmark sweeps, but a *dense* sweep measures every grid point even
+though the K-S statistics localize the boundary after a handful of rows.
+This module plans sweeps instead of enumerating them:
+
+* a **coarse logarithmic pass** (the §IV-B doubling ladder, issued in
+  chunked batch calls) brackets the boundary octave;
+* the dense workflow's own **binary bisection** narrows the interval —
+  replayed probe-for-probe so the planner lands on the *identical sweep
+  lattice* as the dense path;
+* a **deterministic classification descent** (``descend_first_shifted``)
+  walks O(log n) rows of that lattice to pin the discrete boundary, and a
+  small window around the flip feeds the K-S confidence metric.
+
+Identity contract: the dense sweeps (``budget=None``) remain the
+equivalence oracle.  Discrete attributes — sizes, line size, fetch
+granularity, amounts, sharing — are *identical* planner-vs-dense because
+both paths evaluate the same local boundary rule over the same grid rows
+(request-keyed streams on simulated runners; shared caches otherwise), and
+every planned search **falls back to the dense sweep** whenever its local
+monotonicity assumptions fail (non-monotone classifications, flukes near
+the boundary, budget exhaustion).  Only the non-discrete floats
+(confidence, p-value) may differ, computed from a window instead of the
+full series.
+
+``SweepBudget`` is the knob set carried on ``DiscoveryRequest``: round and
+row ceilings plus an optional target resolution for deliberately coarse
+(non-oracle-identical) scans.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..probes.linesize import (GranularityResult, LineSizeResult,
+                               find_fetch_granularity, find_line_size,
+                               granularity_refs, line_size_from_first_hit)
+from ..probes.size import (ShiftClassifier, SizeResult, bisect_interval,
+                           boundary_window, classification_jump,
+                           descend_first_shifted, finalize_size,
+                           rescue_change_point, sweep_grid, sweep_rows,
+                           widen_interval)
+from ..stats import geometric_reduction
+
+__all__ = ["SweepBudget", "find_size_planned", "find_granularity_planned",
+           "find_line_size_planned"]
+
+KIB = 1024
+
+
+@dataclass(frozen=True)
+class SweepBudget:
+    """Resource envelope for one planned family search.
+
+    ``max_rounds`` bounds interval widenings plus ladder chunks, and
+    ``max_rows`` is a ceiling on sampled grid rows per search — exhausting
+    either falls back to the dense sweep, so a budget can make a search
+    slower but never wrong.  ``target_resolution`` (bytes) coarsens the
+    final lattice for deliberately cheap scans — the only knob that trades
+    the dense-identity guarantee for speed, so it defaults to off.  (The
+    boundary-detection window is deliberately NOT a knob:
+    ``size.BOUNDARY_WINDOW`` is shared with the dense path because both
+    must evaluate the identical window for their answers to be identical.)
+    """
+
+    max_rounds: int = 12
+    max_rows: int | None = None
+    target_resolution: int | None = None
+    ladder_chunk: int = 4          # doubling-ladder batch size
+
+    def descriptor(self) -> dict:
+        """Stable content-address fragment for the TopologyStore."""
+        return {
+            "max_rounds": int(self.max_rounds),
+            "max_rows": None if self.max_rows is None else int(self.max_rows),
+            "target_resolution": (None if self.target_resolution is None
+                                  else int(self.target_resolution)),
+            "ladder_chunk": int(self.ladder_chunk),
+        }
+
+
+class _RowMeter:
+    """Counts grid rows a planned search has fetched (max_rows accounting)."""
+
+    def __init__(self, budget: SweepBudget):
+        self.limit = budget.max_rows
+        self.rows = 0
+
+    def charge(self, n: int) -> None:
+        self.rows += int(n)
+
+    @property
+    def exhausted(self) -> bool:
+        return self.limit is not None and self.rows >= self.limit
+
+
+def _fetch_window(runner, space: str, sizes: np.ndarray, step: int,
+                  n_samples: int) -> np.ndarray:
+    """Fetch a row window as ONE fresh dispatch when the runner supports it.
+
+    The window change-point scan compares rows against each other, so on
+    measuring runners they must share a launch clock; ``fresh=True``
+    bypasses cache *serving* (identical values on request-keyed runners).
+    """
+    try:
+        return np.asarray(runner.pchase_many(
+            [(space, int(s), int(step)) for s in sizes], n_samples,
+            fresh=True))
+    except (AttributeError, TypeError):
+        return sweep_rows(runner, space, sizes, step, n_samples,
+                          batched=True)
+
+
+# --------------------------------------------------------------------------
+# §IV-B size search
+# --------------------------------------------------------------------------
+def find_size_planned(runner, space: str, *, budget: SweepBudget,
+                      lo: int = 1 * KIB, step: int = 32, n_samples: int = 33,
+                      alpha: float = 0.01, max_points: int = 96,
+                      max_widenings: int = 3,
+                      max_bytes: int | None = None) -> SizeResult:
+    """Coarse-to-fine §IV-B search; discrete-identical to dense ``find_size``.
+
+    Stage 1 (coarse): the doubling ladder is issued in ``ladder_chunk``-row
+    batch calls instead of one probe per doubling — same first-shifted
+    decision, a fraction of the dispatches.  Stage 2: the dense bisection,
+    replayed exactly.  Stage 3 (fine): the classification descent over the
+    dense sweep lattice samples O(log n) rows where the dense path measures
+    all of them; a ±``window`` row neighborhood of the flip is then fetched
+    (one batch call, mostly cache hits) for the K-S confidence split.
+    """
+    from ..probes.size import find_size          # dense fallback
+
+    max_bytes = max_bytes or 64 * 1024 * KIB
+    meter = _RowMeter(budget)
+    rounds = 0
+
+    base = runner.pchase(space, lo, step, n_samples)
+    clf = ShiftClassifier(base, alpha, classification_jump(runner))
+    meter.charge(1)
+
+    # -- coarse pass: chunked doubling ladder
+    ladder = []
+    size = lo
+    while size <= max_bytes:
+        size *= 2
+        ladder.append(size)
+    first_bad = None
+    probed = 0
+    for c in range(0, len(ladder), max(budget.ladder_chunk, 1)):
+        part = ladder[c: c + max(budget.ladder_chunk, 1)]
+        rows = sweep_rows(runner, space, part, step, n_samples, batched=True)
+        meter.charge(len(part))
+        probed += len(part)
+        rounds += 1
+        for sz, row in zip(part, rows):
+            if clf.shifted(row):
+                first_bad = sz
+                break
+        if first_bad is not None or rounds >= budget.max_rounds:
+            break
+    if first_bad is None:
+        if probed < len(ladder):
+            # ladder cut short by the round budget: let the oracle decide
+            return find_size(runner, space, lo=lo, step=step,
+                             n_samples=n_samples, alpha=alpha,
+                             max_points=max_points,
+                             max_widenings=max_widenings,
+                             max_bytes=max_bytes, batched=True)
+        # No shifted rung: re-fetch the ladder as ONE fresh launch and look
+        # for an inter-rung regime change (baseline-free — the dense path's
+        # ladder_rescue over the same keyed rows on simulated runners).
+        from ..probes.size import ladder_rescue
+
+        fresh = _fetch_window(runner, space, np.asarray(ladder), step,
+                              n_samples)
+        meter.charge(len(ladder))
+        first_bad = ladder_rescue(ladder, fresh, alpha)
+    if first_bad is None:
+        return SizeResult(-1, False, 0.0, 1.0, np.zeros(0), np.zeros(0),
+                          0, n_samples)
+
+    # -- bisection: identical to the dense path, probe for probe (single
+    # rows go through the lean ``pchase`` cache path, not a 1-row batch)
+    def shifted_at(sz: int) -> bool:
+        meter.charge(1)
+        return clf.shifted(runner.pchase(space, int(sz), step, n_samples))
+
+    sweep_lo, sweep_hi = bisect_interval(shifted_at, first_bad, step)
+
+    eff_floor = step
+    if budget.target_resolution is not None:
+        eff_floor = max(step, budget.target_resolution // step * step)
+
+    widenings = 0
+    while True:
+        G, eff_step = sweep_grid(sweep_lo, sweep_hi, step, max_points)
+        if eff_floor > eff_step:
+            # Deliberately coarse scan (non-oracle-identical, documented).
+            # The bisected interval can be narrower than a few coarse
+            # steps, so pad it — the descent needs a bracketable grid.
+            pad = 4 * eff_floor
+            glo, ghi = max(lo, sweep_lo - pad), min(max_bytes, sweep_hi + pad)
+            G = np.arange(glo, ghi + eff_floor, eff_floor, dtype=np.int64)
+            eff_step = eff_floor
+        n = G.size
+        if n < 4 or meter.exhausted:
+            # unusably small lattice / row budget exhausted: the dense
+            # sweep is slower but never wrong
+            return find_size(runner, space, lo=lo, step=step,
+                             n_samples=n_samples, alpha=alpha,
+                             max_points=max_points,
+                             max_widenings=max_widenings,
+                             max_bytes=max_bytes, batched=True)
+
+        memo: dict[int, np.ndarray] = {}
+
+        def row_at(i: int) -> np.ndarray:
+            if i not in memo:
+                memo[i] = runner.pchase(space, int(G[i]), step, n_samples)
+                meter.charge(1)
+            return memo[i]
+
+        flip = descend_first_shifted(lambda i: clf.shifted(row_at(i)), n)
+
+        if (flip <= 2 or flip >= n - 2) and widenings < max_widenings:
+            rounds += 1
+            if rounds >= budget.max_rounds:
+                return find_size(runner, space, lo=lo, step=step,
+                                 n_samples=n_samples, alpha=alpha,
+                                 max_points=max_points,
+                                 max_widenings=max_widenings,
+                                 max_bytes=max_bytes, batched=True)
+            widenings += 1
+            sweep_lo, sweep_hi = widen_interval(sweep_lo, sweep_hi, eff_step,
+                                                lo, max_bytes)
+            continue
+        if 0 < flip < n:
+            # The boundary window: the same fixed-width slice of the
+            # lattice the dense path evaluates, fetched FRESH as one
+            # dispatch — the window scan needs rows that share a launch
+            # clock, not a mix of descent-time cache entries recorded at
+            # different drift levels (request-keyed runners return
+            # identical rows either way).
+            wa, wb = boundary_window(flip, n)
+            wrows = _fetch_window(runner, space, G[wa:wb], step, n_samples)
+            meter.charge(wb - wa)
+            result = finalize_size(G, wa, wrows, flip, widenings, n_samples,
+                                   alpha)
+        else:
+            result = None
+        if result is None:
+            # Flip escaped/suspect: fetch the whole lattice (ONE fresh
+            # launch — its rows share a scale) and run the same
+            # scale-immune change-point rescue as the dense sweep.
+            rows = _fetch_window(runner, space, G, step, n_samples)
+            meter.charge(n)
+            result = rescue_change_point(G, rows, widenings, n_samples,
+                                         alpha)
+        if not result.found and widenings < max_widenings:
+            # same power-recovery widening as the dense sweep
+            rounds += 1
+            if rounds >= budget.max_rounds:
+                return find_size(runner, space, lo=lo, step=step,
+                                 n_samples=n_samples, alpha=alpha,
+                                 max_points=max_points,
+                                 max_widenings=max_widenings,
+                                 max_bytes=max_bytes, batched=True)
+            widenings += 1
+            sweep_lo, sweep_hi = widen_interval(sweep_lo, sweep_hi, eff_step,
+                                                lo, max_bytes)
+            continue
+        return result
+
+
+# --------------------------------------------------------------------------
+# §IV-D fetch-granularity search
+# --------------------------------------------------------------------------
+def find_granularity_planned(runner, space: str, *, budget: SweepBudget,
+                             max_stride: int = 512,
+                             array_bytes: int = 64 * 1024,
+                             n_samples: int = 65, stride_step: int = 4,
+                             confirm: int = 2) -> GranularityResult:
+    """Bisection for the first all-miss stride + local run verification.
+
+    The dense answer is the start of the first ``confirm + 1``-long run of
+    all-miss strides; that is a local predicate of the stride grid, so a
+    bisection that assumes "mixed below G, all-miss above" finds it in
+    O(log n) rows and then *verifies* the run locally.  Any verification
+    failure (a fluke hit past the candidate, a mixed stride at the grid
+    top, hits at the first stride without a leading run) means the
+    monotonicity assumption does not hold — fall back to the dense sweep,
+    which is fluke-robust by construction.
+    """
+    def dense() -> GranularityResult:
+        return find_fetch_granularity(
+            runner, space, max_stride=max_stride, array_bytes=array_bytes,
+            n_samples=n_samples, stride_step=stride_step, confirm=confirm,
+            batched=True)
+
+    hit_ref, miss_ref, thresh, hit_med, miss_med = granularity_refs(
+        runner, space, array_bytes, max_stride, n_samples, stride_step)
+    del hit_ref, miss_ref
+    strides = np.arange(stride_step, max_stride + stride_step, stride_step)
+    if miss_med < hit_med * 1.5:
+        # same degenerate-references refusal as the dense sweep
+        return GranularityResult(-1, False, strides[:0],
+                                 np.zeros(0, dtype=bool))
+    n = strides.size
+    n_loads = 16 * n_samples
+    min_frac = max(0.005, 2.0 / n_loads)
+
+    memo: dict[int, bool] = {}
+
+    def mixed(i: int) -> bool:
+        if i not in memo:
+            s = int(strides[i])
+            arr = max(array_bytes, s * (n_loads + 1))
+            row = np.asarray(runner.cold_chase_batch(space, [arr], [s],
+                                                     n_loads))[0] \
+                if hasattr(runner, "cold_chase_batch") else \
+                runner.cold_chase(space, arr, s, n_loads)
+            memo[i] = float(np.mean(np.asarray(row) < thresh)) > min_frac
+        return memo[i]
+
+    # top anchor: the largest strides must be cleanly all-miss
+    if any(mixed(i) for i in range(n - 1 - confirm, n)):
+        return dense()
+    if not mixed(0):
+        # granularity at (or flukes near) the very first stride
+        upto = min(confirm + 1, n)
+        if all(not mixed(i) for i in range(upto)):
+            m = np.array([mixed(i) for i in range(upto)], dtype=bool)
+            return GranularityResult(int(strides[0]), True, strides[:upto], m)
+        return dense()
+
+    lo, hi = 0, n - 1 - confirm
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if mixed(mid):
+            lo = mid
+        else:
+            hi = mid
+    f = hi
+    # Run verification: confirm successors all-miss, predecessors mixed.
+    # TWO predecessors, not one — the bisection's landing flag and the
+    # f-1 verification would otherwise be the same (possibly fluked) row,
+    # and on measuring backends a single drifted launch can scale a whole
+    # row across the hit/miss threshold.  Demanding an independent second
+    # mixed row squares the fluke probability; any disagreement falls
+    # back to the fluke-robust dense sweep.
+    if any(mixed(f + k) for k in range(confirm + 1)):
+        return dense()
+    if any(not mixed(f - k) for k in (1, 2) if f - k >= 0):
+        return dense()
+    upto = f + confirm + 1
+    m = np.zeros(upto, dtype=bool)
+    for i, flag in memo.items():
+        if i < upto:
+            m[i] = flag
+    return GranularityResult(int(strides[f]), True, strides[:upto], m)
+
+
+# --------------------------------------------------------------------------
+# §IV-E line-size search
+# --------------------------------------------------------------------------
+def find_line_size_planned(runner, space: str, cache_size: int,
+                           fetch_granularity: int, *, budget: SweepBudget,
+                           n_samples: int = 65, over_factor: float = 1.0625,
+                           max_line: int = 1024) -> LineSizeResult:
+    """Bisection for the first hit-classified step (§IV-E).
+
+    The dense answer is the first step whose distribution sits closer to
+    the certain-hit reference than to the certain-miss pivot — again a
+    local predicate, structurally monotone (footprint shrinks below
+    capacity exactly once as the step grows).  Verified at the flip;
+    non-monotone scores fall back to the dense chunked sweep.
+    """
+    def dense() -> LineSizeResult:
+        return find_line_size(runner, space, cache_size, fetch_granularity,
+                              n_samples=n_samples, over_factor=over_factor,
+                              max_line=max_line, batched=True)
+
+    from ..probes.linesize import hit_scores
+
+    g2 = max(fetch_granularity // 2, 4)
+    arr = int(cache_size * over_factor)
+    pivot = runner.pchase(space, arr, g2, n_samples)
+    hit_ref = runner.pchase(space, arr, max_line * 8, n_samples)
+    steps = np.arange(g2, max_line * 2 + g2, g2, dtype=np.int64)
+    n = steps.size
+
+    memo: dict[int, float] = {}
+
+    def score(i: int) -> float:
+        if i not in memo:
+            row = runner.pchase(space, arr, int(steps[i]), n_samples)
+            memo[i] = float(hit_scores(row, pivot, hit_ref)[0])
+        return memo[i]
+
+    if score(0) > 0:
+        # line <= granularity/2: every step hits — but demand independent
+        # confirmation before accepting the degenerate answer
+        if any(score(k) <= 0 for k in (1, 2) if k < n):
+            return dense()
+        first_hit_step = int(steps[0])
+    elif score(n - 1) <= 0:
+        # top step misses: demand an independent second row before the
+        # terminal not-found (a single drifted launch must not erase the
+        # attribute); disagreement lets dense rule
+        if n >= 2 and score(n - 2) > 0:
+            return dense()
+        return LineSizeResult(-1, False, -1.0, steps,
+                              np.array([score(0), score(n - 1)]))
+    else:
+        lo, hi = 0, n - 1
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if score(mid) > 0:
+                hi = mid
+            else:
+                lo = mid
+        # Verify with an extra independent below-flip row (mirrors the
+        # granularity planner): non-monotone scores let dense rule.
+        if any(score(hi - k) > 0 for k in (1, 2) if hi - k >= 0):
+            return dense()
+        first_hit_step = int(steps[hi])
+
+    line, raw = line_size_from_first_hit(first_hit_step, over_factor, g2)
+    ks = sorted(memo)
+    return LineSizeResult(line, True, raw, steps[ks],
+                          np.array([memo[i] for i in ks]))

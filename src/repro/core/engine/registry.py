@@ -42,6 +42,7 @@ class ProbeContext:
     results: dict = field(default_factory=dict)     # family -> result (space)
     all_results: dict = field(default_factory=dict)  # space -> family -> result
     infos: list = field(default_factory=list)        # probed SpaceInfos, in order
+    budget: object | None = None        # SweepBudget -> adaptive planner
 
 
 @dataclass(frozen=True)
@@ -64,12 +65,13 @@ def _run_size(ctx: ProbeContext):
     step0 = 4 if info.kind == "scratchpad" else 32
     return find_size(ctx.runner, info.name, lo=1 * KIB, step=step0,
                      n_samples=ctx.n_samples, max_bytes=info.max_bytes,
-                     batched=True)
+                     batched=True, budget=ctx.budget)
 
 
 def _run_fetch_granularity(ctx: ProbeContext):
     return find_fetch_granularity(ctx.runner, ctx.info.name,
-                                  n_samples=ctx.n_samples, batched=True)
+                                  n_samples=ctx.n_samples, batched=True,
+                                  budget=ctx.budget)
 
 
 def _fetch_of(results: dict) -> int:
@@ -97,7 +99,7 @@ def _run_line_size(ctx: ProbeContext):
         return None
     return find_line_size(ctx.runner, ctx.info.name, sr.size,
                           _fetch_of(ctx.results), n_samples=ctx.n_samples,
-                          batched=True)
+                          batched=True, budget=ctx.budget)
 
 
 def _run_amount(ctx: ProbeContext):

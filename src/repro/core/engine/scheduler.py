@@ -21,7 +21,7 @@ from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable
 
-__all__ = ["WorkItem", "ScheduleResult", "run_work_items"]
+__all__ = ["WorkItem", "ScheduleResult", "run_work_items", "check_items"]
 
 
 @dataclass(frozen=True)
@@ -45,8 +45,20 @@ class ScheduleResult:
     wall_seconds: float = 0.0
 
 
+def check_items(items: list[WorkItem]) -> dict:
+    """Validate keys/deps; returns the key->item map (shared with fusion)."""
+    by_key = {it.key: it for it in items}
+    if len(by_key) != len(items):
+        raise ValueError("duplicate work-item keys")
+    for it in items:
+        unknown = [d for d in it.deps if d not in by_key]
+        if unknown:
+            raise ValueError(f"{it.key}: unknown deps {unknown}")
+    return by_key
+
+
 def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
-                   timings=None) -> ScheduleResult:
+                   timings=None, fuser=None) -> ScheduleResult:
     """Execute ``items`` respecting dependencies; returns results + order.
 
     ``max_workers=0`` runs everything inline on the calling thread in
@@ -56,16 +68,20 @@ def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
     picks a pool size from the CPU count, staying inline on boxes where
     threads can only fight over the GIL.
 
+    ``fuser`` (a ``fusion.FusionDispatcher``) switches to round-based
+    cross-family batch fusion: ready items run concurrently but every
+    probe dispatch is coalesced and executed serially by the coordinator —
+    see ``engine/fusion.py``.  ``max_workers`` is ignored in that mode.
+
     Raises on unknown dependencies or cycles (both indicate a registry bug,
     not a runtime condition worth limping through).
     """
-    by_key = {it.key: it for it in items}
-    if len(by_key) != len(items):
-        raise ValueError("duplicate work-item keys")
-    for it in items:
-        unknown = [d for d in it.deps if d not in by_key]
-        if unknown:
-            raise ValueError(f"{it.key}: unknown deps {unknown}")
+    if fuser is not None:
+        from .fusion import run_fused
+
+        return run_fused(items, fuser, timings=timings)
+
+    by_key = check_items(items)
 
     out = ScheduleResult()
     t_start = time.perf_counter()

@@ -45,7 +45,8 @@ import numpy as np
 
 from ..topology import Topology
 
-__all__ = ["TopologyStore", "StoredTopology", "StoreLock", "request_key"]
+__all__ = ["TopologyStore", "StoredTopology", "StoreLock", "GcPolicy",
+           "request_key"]
 
 SCHEMA_VERSION = 1
 
@@ -154,6 +155,20 @@ def request_key(descriptor: dict) -> str:
                       sort_keys=True, separators=(",", ":"),
                       default=str).encode()
     return hashlib.blake2b(blob, digest_size=16).hexdigest()
+
+
+@dataclass(frozen=True)
+class GcPolicy:
+    """Retention policy for ``TopologyStore.gc`` / ``discover(gc_policy=)``.
+
+    ``max_entries`` keeps at most that many newest topologies;
+    ``max_age_s`` evicts entries whose ``created_at`` is older than the
+    horizon.  Both are opt-in (None = unlimited), and eviction always
+    removes the topology *and* its sample archive as one pair.
+    """
+
+    max_entries: int | None = None
+    max_age_s: float | None = None
 
 
 @dataclass
@@ -358,6 +373,51 @@ class TopologyStore:
                 zipfile.BadZipFile):
             self._quarantine(path)
             return None
+
+    # ----------------------------------------------------------------- gc
+    def gc(self, *, max_entries: int | None = None,
+           max_age_s: float | None = None,
+           now: float | None = None) -> dict:
+        """Retention sweep: evict oldest entries beyond the given ceilings.
+
+        Ranking is oldest-``created_at``-first (entries without a readable
+        timestamp rank oldest, so damaged metadata cannot pin an entry
+        forever).  Each eviction removes the topology document and its
+        sample archive as one pair; orphaned sample archives (samples whose
+        topology is gone — e.g. after a quarantine) are swept as well.  The
+        whole sweep runs under the store's advisory write lock so a
+        concurrent discovery cannot interleave a persist with the unlink
+        pair.  Returns ``{"evicted": [keys...], "kept": n, "orphans": n}``.
+        """
+        now = time.time() if now is None else now
+        with self._lock:
+            aged = sorted(self.index(),
+                          key=lambda km: km[1].get("created_at", 0.0))
+            evict: list[str] = []
+            if max_age_s is not None:
+                horizon = now - max_age_s
+                evict.extend(k for k, meta in aged
+                             if meta.get("created_at", 0.0) < horizon)
+            if max_entries is not None and len(aged) - len(evict) > max_entries:
+                overflow = len(aged) - len(evict) - max_entries
+                remaining = [k for k, _ in aged if k not in set(evict)]
+                evict.extend(remaining[:overflow])
+            for key in evict:
+                self.delete(key)
+            # orphaned sample archives: samples/<key>.npz without a topology
+            orphans = 0
+            live = set(self.keys())
+            for f in os.listdir(self._samples_dir):
+                if not f.endswith(".npz"):
+                    continue
+                key = os.path.splitext(f)[0]
+                if key not in live:
+                    try:
+                        os.remove(os.path.join(self._samples_dir, f))
+                        orphans += 1
+                    except FileNotFoundError:
+                        pass
+            return {"evicted": evict, "kept": len(live), "orphans": orphans}
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:

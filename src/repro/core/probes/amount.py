@@ -18,6 +18,23 @@ __all__ = ["AmountResult", "find_amount", "align_segments",
            "CuSharingResult", "find_cu_sharing"]
 
 
+def _hit_miss_refs(runner, space: str, arr: int, cache_size: int,
+                   n_samples: int) -> tuple[np.ndarray, np.ndarray]:
+    """The Fig. 3 step-3 reference pair: a warm chase that surely hits and a
+    beyond-capacity chase that surely misses.
+
+    Issued as ONE ``pchase_many`` call on runners with the fused-batch
+    capability (one dispatch — and one fusion round — instead of two), with
+    per-row request keys identical to the two sequential ``pchase`` calls,
+    so results are unchanged everywhere."""
+    if hasattr(runner, "pchase_many"):
+        rows = np.asarray(runner.pchase_many(
+            [(space, arr // 4, 32), (space, cache_size * 4, 32)], n_samples))
+        return rows[0], rows[1]
+    return (runner.pchase(space, arr // 4, 32, n_samples),
+            runner.pchase(space, cache_size * 4, 32, n_samples))
+
+
 def _is_miss(probe: np.ndarray, hit_ref: np.ndarray, miss_ref: np.ndarray,
              alpha: float = 0.01) -> bool:
     """Classify a step-3 distribution: closer to the miss or the hit regime."""
@@ -27,9 +44,13 @@ def _is_miss(probe: np.ndarray, hit_ref: np.ndarray, miss_ref: np.ndarray,
         return True
     if differs_from_miss and not differs_from_hit:
         return False
-    # Ambiguous -> fall back to median proximity.
-    pm, hm, mm = (float(np.median(x)) for x in (probe, hit_ref, miss_ref))
-    return abs(pm - mm) < abs(pm - hm)
+    # Ambiguous -> fall back to median proximity, in LOG space: drift on
+    # measuring backends scales a whole row multiplicatively, and the log
+    # distance keeps the hit/miss midpoint drift-symmetric (a linear
+    # midpoint sits nearer the miss side and misreads deflated miss rows).
+    pm, hm, mm = (max(float(np.median(x)), 1e-12)
+                  for x in (probe, hit_ref, miss_ref))
+    return abs(np.log(pm / mm)) < abs(np.log(pm / hm))
 
 
 @dataclass(frozen=True)
@@ -52,8 +73,8 @@ def find_amount(runner, space: str, cache_size: int, cores_per_sm: int,
     free).
     """
     arr = int(cache_size * 0.9)  # "close to the cache size"
-    hit_ref = runner.pchase(space, arr // 4, 32, n_samples)
-    miss_ref = runner.pchase(space, cache_size * 4, 32, n_samples)
+    hit_ref, miss_ref = _hit_miss_refs(runner, space, arr, cache_size,
+                                       n_samples)
 
     if batched:
         bs = []
@@ -126,8 +147,8 @@ def find_sharing_batch(runner, space_a: str, space_bs: list[str],
     if not space_bs:
         return []
     arr = int(cache_size * 0.9)
-    hit_ref = runner.pchase(space_a, arr // 4, 32, n_samples)
-    miss_ref = runner.pchase(space_a, cache_size * 4, 32, n_samples)
+    hit_ref, miss_ref = _hit_miss_refs(runner, space_a, arr, cache_size,
+                                       n_samples)
     rows = np.stack([runner.sharing_probe(space_a, b, arr, n_samples)
                      for b in space_bs])
     miss = classify_miss_rows(rows, hit_ref, miss_ref)
@@ -158,8 +179,8 @@ def find_cu_sharing(runner, cu_ids: list[int], cache_size: int,
     identical.
     """
     arr = int(cache_size * 0.9)
-    hit_ref = runner.pchase(space, arr // 4, 32, n_samples)
-    miss_ref = runner.pchase(space, cache_size * 4, 32, n_samples)
+    hit_ref, miss_ref = _hit_miss_refs(runner, space, arr, cache_size,
+                                       n_samples)
 
     assigned: dict[int, int] = {}
     groups: list[list[int]] = []

@@ -14,6 +14,13 @@ exceeds C (misses); once step > line the touched-line footprint shrinks below
 C "as if the cache was larger" (hits). Per the paper's heuristics we compare
 each step's distribution to a certain-miss pivot and a certain-hit MAX
 reference, and snap the estimate to a power of two.
+
+Both searches admit the adaptive planner (``budget=`` routes to
+``engine/planner.py``): their discrete answers are *local* predicates of the
+stride/step grid — the start of the first ``confirm``-long all-miss run, the
+first hit-classified step — so a bisection that probes O(log n) grid rows
+returns the identical answer whenever classification is locally monotone,
+and the planner falls back to this dense implementation when it is not.
 """
 from __future__ import annotations
 
@@ -21,10 +28,10 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..stats import ks_statistic, ks_statistic_rows
+from ..stats import ks_statistic_rows
 
 __all__ = ["GranularityResult", "find_fetch_granularity",
-           "LineSizeResult", "find_line_size", "snap_pow2"]
+           "LineSizeResult", "find_line_size", "snap_pow2", "hit_scores"]
 
 
 def snap_pow2(x: float) -> int:
@@ -44,6 +51,36 @@ class GranularityResult:
     mixed: np.ndarray          # bool per stride: hits+misses mixed?
 
 
+def granularity_refs(runner, space: str, array_bytes: int, max_stride: int,
+                     n_samples: int, stride_step: int):
+    """Warm-hit / all-miss reference distributions + their threshold.
+
+    Shared by the dense sweep and the planner so both classify per-load
+    hit/miss against identical references (identical keys -> identical rows
+    on request-keyed runners).
+
+    The threshold is the *geometric* midpoint of the two medians: drift on
+    measuring backends is multiplicative (a whole launch scales by its
+    calibration ratio), and the geometric midpoint keeps the hit/miss
+    margin symmetric under that scaling — an arithmetic midpoint sits
+    closer to the miss side and lets a modestly inflated miss reference
+    poison every subsequent classification.  A threshold only separates
+    anything when the references themselves are separated, so the medians
+    are returned too and ``find_fetch_granularity`` refuses to classify
+    (returns not-found) when the miss median is not >=1.5x the hit median
+    — the same practical-significance line the size classifier draws.
+    """
+    hit_ref = runner.pchase(space, array_bytes // 4, stride_step * 8,
+                            n_samples)
+    ref_stride = max_stride * 8
+    miss_ref = runner.cold_chase(space, ref_stride * (n_samples + 1),
+                                 ref_stride, n_samples)
+    hit_med = max(float(np.median(hit_ref)), 1e-12)
+    miss_med = max(float(np.median(miss_ref)), 1e-12)
+    thresh = float(np.sqrt(hit_med * miss_med))
+    return hit_ref, miss_ref, thresh, hit_med, miss_med
+
+
 def find_fetch_granularity(
     runner, space: str,
     max_stride: int = 512,
@@ -52,6 +89,7 @@ def find_fetch_granularity(
     stride_step: int = 4,
     confirm: int = 2,
     batched: bool = False,
+    budget=None,
 ) -> GranularityResult:
     """Paper §IV-D: grow the stride by 4 B until only misses remain.
 
@@ -67,16 +105,28 @@ def find_fetch_granularity(
     The sequential early-stop is replayed on the classified chunk, so the
     returned result is bit-identical (request-keyed streams make the at most
     one chunk of extra probes side-effect free).
-    """
-    # References: a warm chase that surely hits, and a cold chase whose
-    # stride is far beyond any plausible granularity (every load misses).
-    hit_ref = runner.pchase(space, array_bytes // 4, stride_step * 8, n_samples)
-    ref_stride = max_stride * 8
-    miss_ref = runner.cold_chase(space, ref_stride * (n_samples + 1),
-                                 ref_stride, n_samples)
-    thresh = (float(np.median(hit_ref)) + float(np.median(miss_ref))) / 2.0
 
+    ``budget`` routes to the adaptive planner: a bisection for the first
+    all-miss stride plus a local run verification, falling back to this
+    dense sweep when the stride classifications are not locally monotone.
+    """
+    if budget is not None:
+        from ..engine.planner import find_granularity_planned
+
+        return find_granularity_planned(
+            runner, space, budget=budget, max_stride=max_stride,
+            array_bytes=array_bytes, n_samples=n_samples,
+            stride_step=stride_step, confirm=confirm)
+    hit_ref, miss_ref, thresh, hit_med, miss_med = granularity_refs(
+        runner, space, array_bytes, max_stride, n_samples, stride_step)
     strides = np.arange(stride_step, max_stride + stride_step, stride_step)
+    if miss_med < hit_med * 1.5:
+        # Degenerate references (e.g. a tiny cache whose warm reference
+        # already misses to the same next level the cold pass does):
+        # hit/miss classification cannot separate anything, so don't
+        # sweep 100+ strides to discover that — §IV-D is inapplicable.
+        return GranularityResult(-1, False, strides[:0],
+                                 np.zeros(0, dtype=bool))
     mixed = np.zeros(strides.size, dtype=bool)
     # Hit/miss is classified per load, so use a long cold pass: near the
     # granularity the hit fraction approaches stride_step/G and needs enough
@@ -122,6 +172,53 @@ class LineSizeResult:
     hit_score: np.ndarray      # similarity-to-hit-reference per step
 
 
+def hit_scores(rows: np.ndarray, pivot: np.ndarray,
+               hit_ref: np.ndarray) -> np.ndarray:
+    """Per-step §IV-E classification score: >0 means closer to the certain-
+    hit reference than to the certain-miss pivot.
+
+    Primary signal is the K-S distance difference the paper's heuristic
+    prescribes.  On measuring backends, per-launch drift can push a row
+    *away from both references at once* — both distances saturate toward 1
+    and their difference becomes sample noise.  Those saturated rows are
+    adjudicated by median log-proximity instead (drift shifts a whole row,
+    so which reference's median is closer in log space survives it), the
+    same fallback the amount/sharing classifier uses when K-S is
+    uninformative.  Shared by the dense sweep and the planner, so both
+    paths score identically.
+    """
+    rows = np.asarray(rows, dtype=np.float64)
+    if rows.ndim == 1:
+        rows = rows[None, :]
+    d_pivot = ks_statistic_rows(rows, pivot)
+    d_hit = ks_statistic_rows(rows, hit_ref)
+    score = d_pivot - d_hit
+    n = rows.shape[1]
+    saturated = np.minimum(d_pivot, d_hit) >= (n - 1) / n
+    if np.any(saturated):
+        med = np.median(rows[saturated], axis=1)
+        lp = np.abs(np.log(np.maximum(med, 1e-12)
+                           / max(float(np.median(pivot)), 1e-12)))
+        lh = np.abs(np.log(np.maximum(med, 1e-12)
+                           / max(float(np.median(hit_ref)), 1e-12)))
+        score[saturated] = lp - lh
+    return score
+
+
+def line_size_from_first_hit(first_hit_step: int, over_factor: float,
+                             g2: int) -> tuple[int, float]:
+    """§IV-E final heuristic: (snapped line size, raw estimate).
+
+    The transition step satisfies step ~= line * over_factor; a step equal
+    to the line size still touches every line, so the first *hitting* step
+    is one granularity notch above — bias the raw estimate down by half a
+    notch before snapping to a power of two.  Shared by the dense sweep and
+    the planner so the discrete answer is one formula."""
+    raw = first_hit_step / over_factor
+    raw_adj = max(raw - g2 / 2, g2)
+    return snap_pow2(raw_adj), raw
+
+
 def find_line_size(
     runner, space: str,
     cache_size: int,
@@ -130,16 +227,27 @@ def find_line_size(
     over_factor: float = 1.0625,
     max_line: int = 1024,
     batched: bool = False,
+    budget=None,
 ) -> LineSizeResult:
     """Paper §IV-E with the pivot/MAX heuristic.
 
-    ``batched=True`` (probe-engine path) issues the whole step sweep as one
-    ``pchase_batch`` call — the strides vary, not the array size, so the
-    batch is over (array, step) pairs via per-step calls folded into one
-    vectorized K-S scoring pass.  The early-stop truncation of the
-    sequential loop is applied post-hoc, so the returned result is
-    bit-identical.
+    ``batched=True`` (probe-engine path) issues the step sweep in chunks of
+    16 (array, step) pairs — one ``pchase_many`` call per chunk on runners
+    that support it (per-row strides; a single kernel launch on the Pallas
+    backend), per-step ``pchase`` calls otherwise — scored by one vectorized
+    K-S pass per chunk.  The early-stop truncation of the sequential loop is
+    applied post-hoc, so the returned result is bit-identical.
+
+    ``budget`` routes to the adaptive planner: bisection for the first
+    hit-classified step, with dense fallback when the scores are not
+    locally monotone.
     """
+    if budget is not None:
+        from ..engine.planner import find_line_size_planned
+
+        return find_line_size_planned(
+            runner, space, cache_size, fetch_granularity, budget=budget,
+            n_samples=n_samples, over_factor=over_factor, max_line=max_line)
     g2 = max(fetch_granularity // 2, 4)
     arr = int(cache_size * over_factor)
 
@@ -159,10 +267,13 @@ def find_line_size(
         cut = steps.size
         for lo in range(0, steps.size, chunk):
             part = steps[lo: lo + chunk]
-            rows = np.stack([runner.pchase(space, arr, int(s), n_samples)
-                             for s in part])
-            scores.append(ks_statistic_rows(rows, pivot)
-                          - ks_statistic_rows(rows, hit_ref))
+            if hasattr(runner, "pchase_many"):
+                rows = np.asarray(runner.pchase_many(
+                    [(space, arr, int(s)) for s in part], n_samples))
+            else:
+                rows = np.stack([runner.pchase(space, arr, int(s), n_samples)
+                                 for s in part])
+            scores.append(hit_scores(rows, pivot, hit_ref))
             done = False
             for i, s in enumerate(part, start=lo):
                 if scores[-1][i - lo] > 0 and first_hit_step < 0:
@@ -180,9 +291,7 @@ def find_line_size(
         first_hit_step = -1
         for i, s in enumerate(steps):
             cur = runner.pchase(space, arr, int(s), n_samples)
-            d_pivot = ks_statistic(cur, pivot)
-            d_hit = ks_statistic(cur, hit_ref)
-            hit_score[i] = d_pivot - d_hit      # >0 -> closer to the hit side
+            hit_score[i] = hit_scores(cur, pivot, hit_ref)[0]
             if hit_score[i] > 0 and first_hit_step < 0:
                 first_hit_step = int(s)
             if first_hit_step > 0 and s >= 4 * first_hit_step:
@@ -191,10 +300,5 @@ def find_line_size(
 
     if first_hit_step < 0:
         return LineSizeResult(-1, False, -1.0, steps, hit_score)
-    # The transition step satisfies step ~= line * over_factor.
-    raw = first_hit_step / over_factor
-    # A step equal to the line size still touches every line; the first
-    # *hitting* step is one granularity notch above -> bias the raw estimate
-    # down by half a notch before snapping to a power of two.
-    raw_adj = max(raw - g2 / 2, g2)
-    return LineSizeResult(snap_pow2(raw_adj), True, raw, steps, hit_score)
+    line, raw = line_size_from_first_hit(first_hit_step, over_factor, g2)
+    return LineSizeResult(line, True, raw, steps, hit_score)

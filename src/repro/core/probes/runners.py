@@ -68,6 +68,15 @@ class ProbeRunner(Protocol):
     def cold_chase_batch(self, space: str, array_bytes_list, stride_list,
                          n_samples: int) -> np.ndarray: ...
 
+    # Heterogeneous fused batches — per-row (space, array_bytes, stride)
+    # triples, the capability the cross-family fusion dispatcher coalesces
+    # ready work items onto (one dispatch per round instead of one per
+    # family).  Optional: the engine falls back to per-row calls when a
+    # runner lacks them.
+    def pchase_many(self, requests, n_samples: int) -> np.ndarray: ...
+
+    def cold_chase_many(self, requests, n_samples: int) -> np.ndarray: ...
+
     def amount_probe(self, space: str, core_a: int, core_b: int,
                      array_bytes: int, n_samples: int) -> np.ndarray: ...
 
@@ -144,6 +153,13 @@ class SimRunner:
         """One vectorized call for a whole granularity stride sweep."""
         return self.device.cold_chase_batch(space, array_bytes_list,
                                             stride_list, n_samples)
+
+    def pchase_many(self, requests, n_samples):
+        """Cross-family fused batch: per-row (space, array_bytes, stride)."""
+        return self.device.pchase_many(requests, n_samples)
+
+    def cold_chase_many(self, requests, n_samples):
+        return self.device.cold_chase_many(requests, n_samples)
 
     def amount_probe(self, space, core_a, core_b, array_bytes, n_samples):
         return self.device.amount_probe(space, core_a, core_b, array_bytes, n_samples)
@@ -257,11 +273,21 @@ class HostRunner:
                 for ab in array_bytes_list]
         return np.stack(rows)
 
+    def pchase_many(self, requests, n_samples):
+        """Fused heterogeneous batch: dependent chases cannot overlap on
+        real hardware, so this is a loop — but it gives the fusion
+        dispatcher one call site, same as the simulator's vector path."""
+        return np.stack([self.pchase(space, int(ab), int(stride), n_samples)
+                         for space, ab, stride in requests])
+
     def cold_chase(self, space, array_bytes, stride, n_samples):
         raise NotImplementedError("host runner has no cold-pass control")
 
     def cold_chase_batch(self, space, array_bytes_list, stride_list,
                          n_samples):
+        raise NotImplementedError("host runner has no cold-pass control")
+
+    def cold_chase_many(self, requests, n_samples):
         raise NotImplementedError("host runner has no cold-pass control")
 
     def amount_probe(self, *a, **k):

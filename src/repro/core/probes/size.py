@@ -6,21 +6,38 @@ Workflow (paper §IV-B.1):
      binary search to re-narrow);
   2. run p-chase with array sizes swept across the interval, step = fetch
      granularity (coarsened only if the interval would need too many points);
-  3. check for outliers; widen the interval and repeat (2) if found;
-  4. reduce (eq. 2) and detect the change point with the K-S test; report the
-     size and the confidence metric.
+  3. check the boundary position; widen the interval and repeat (2) when the
+     change sits at the interval edge;
+  4. locate the change point with the K-S machinery and report the size and
+     the confidence metric.
+
+Boundary rule (shared with the adaptive planner): the discrete capacity is
+the *classification flip* of the sweep grid — the first grid size whose
+latency distribution departs from the in-capacity baseline (two-sample K-S
+rejection plus a practical median jump), located by a deterministic
+bisection over grid indices (``descend_first_shifted``).  Because the rule
+is a local function of individual grid rows, the adaptive coarse-to-fine
+planner (``engine/planner.py``) can reproduce it exactly while sampling
+only O(log n) of the grid: dense and planned sweeps return *identical*
+discrete sizes by construction whenever the underlying rows agree (always,
+for request-keyed simulated runners; whenever rows are shared, for
+measuring runners).  The K-S split at the flip still provides the paper's
+confidence metric, and CUSUM remains the parametric cross-check.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Callable
 
 import numpy as np
 
-from ..stats import (boundary_suspect, cusum_change_point,
-                     geometric_reduction, ks_2samp, ks_change_point,
+from ..stats import (cusum_change_point, geometric_reduction, ks_2samp,
                      ks_change_point_scan, winsorize)
+from ..stats.ks import ks_critical_value
 
-__all__ = ["SizeResult", "find_size", "sweep_rows"]
+__all__ = ["SizeResult", "find_size", "sweep_rows", "descend_first_shifted",
+           "sweep_grid", "bisect_interval", "ShiftClassifier",
+           "boundary_window", "BOUNDARY_WINDOW"]
 
 KIB = 1024
 
@@ -31,7 +48,7 @@ class SizeResult:
     found: bool
     confidence: float        # K-S confidence at the change point
     pvalue: float
-    sizes_swept: np.ndarray  # the final sweep grid
+    sizes_swept: np.ndarray  # the final sweep grid (confidence window when planned)
     reduced: np.ndarray      # eq. 2 series over the grid (for Fig. 2 plots)
     widenings: int           # how many times step (3) widened the interval
     samples_per_size: int
@@ -39,15 +56,69 @@ class SizeResult:
                                # algorithms'); False flags a suspect result
 
 
-def _distribution_shifted(base: np.ndarray, cur: np.ndarray, alpha: float,
-                          min_jump: float = 0.15) -> bool:
-    """Statistical (K-S) AND practical significance: a real next-level miss
-    raises the median by >=1.5x on every hierarchy in the paper's tables;
-    requiring a modest +15% median jump suppresses the ~alpha-rate false
-    positives that small samples produce on identical distributions."""
-    if not ks_2samp(base, cur, alpha=alpha).reject:
-        return False
-    return float(np.median(cur)) > float(np.median(base)) * (1.0 + min_jump)
+def _fast_median(x: np.ndarray) -> float:
+    """np.median without its dispatch overhead (equal values, ~3x faster
+    on the tiny per-row sample vectors classification works over)."""
+    n = x.size
+    h = n // 2
+    if n % 2:
+        return float(np.partition(x, h)[h])
+    p = np.partition(x, (h - 1, h))
+    return 0.5 * (float(p[h - 1]) + float(p[h]))
+
+
+def classification_jump(runner) -> float:
+    """The practical-significance median-jump guard for ``runner``.
+
+    Request-keyed (deterministic) runners carry no cross-launch drift, so
+    a modest +15% jump suffices to suppress the ~alpha-rate K-S false
+    positives — and preserves sensitivity to subtle real steps (a
+    scratchpad spilling into an only-slightly-slower cache).  Measuring
+    runners need +50%: their calibration drift can offset same-regime
+    medians by tens of percent between launches, and every hierarchy in
+    the paper's tables jumps >=1.5x at a true boundary.  Dense sweep and
+    planner derive the guard from the same runner, so it cannot split
+    their decisions.
+    """
+    return 0.15 if getattr(runner, "deterministic", False) else 0.5
+
+
+class ShiftClassifier:
+    """Memoized "has this row departed from the baseline?" decision.
+
+    Statistical (K-S) AND practical significance (a median jump of at
+    least ``min_jump`` — see ``classification_jump`` for how the guard is
+    chosen per runner).
+
+    Classification sits on the hot path of every search (the descent, the
+    ladder, the bisection — hundreds of decisions per discovery), so the
+    baseline side is computed once: sorted samples, jump threshold, and the
+    critical value for the (n, m) pair.  Decisions are identical to a
+    fresh ``ks_2samp`` + median-jump evaluation per row.
+    """
+
+    def __init__(self, base: np.ndarray, alpha: float,
+                 min_jump: float = 0.5):
+        self.base = np.asarray(base, dtype=np.float64).ravel()
+        self.alpha = alpha
+        self._sorted = np.sort(self.base)
+        self._jump_med = _fast_median(self.base) * (1.0 + min_jump)
+        self._crit: dict[int, float] = {}
+
+    def shifted(self, cur: np.ndarray) -> bool:
+        cur = np.asarray(cur, dtype=np.float64).ravel()
+        b = np.sort(cur)
+        n, m = self._sorted.size, b.size
+        pooled = np.concatenate([self._sorted, b])
+        d = float(np.max(np.abs(
+            np.searchsorted(self._sorted, pooled, side="right") / n
+            - np.searchsorted(b, pooled, side="right") / m)))
+        crit = self._crit.get(m)
+        if crit is None:
+            crit = self._crit[m] = ks_critical_value(n, m, self.alpha)
+        if d <= crit:
+            return False
+        return _fast_median(cur) > self._jump_med
 
 
 def sweep_rows(runner, space: str, sizes, stride: int, n_samples: int,
@@ -63,6 +134,202 @@ def sweep_rows(runner, space: str, sizes, stride: int, n_samples: int,
                      for s in sizes])
 
 
+def descend_first_shifted(classify: Callable[[int], bool], n: int,
+                          confirm: int = 1) -> int:
+    """First *confirmed* shifted grid index in [0, n) by bisection.
+
+    ``classify(i)`` answers "has row i's distribution departed from the
+    baseline?" and must be memoized by the caller (each index is asked at
+    most once; re-asking must return the same answer).  The boundary is
+    the first index opening a run of ``1 + confirm`` consecutive shifted
+    rows: on measuring runners a steal burst can scale one row across the
+    classification threshold, and requiring an independent successor
+    prevents a lone fluke from both steering the bisection and confirming
+    itself.  When confirmation fails, the disconfirming row is *known
+    in-capacity evidence* and the descent resumes above it — the rule
+    stays a deterministic local function of the rows, so the dense sweep
+    (classifying in-memory rows) and the adaptive planner (fetching rows
+    on demand) agree index-for-index whenever their rows agree.
+
+    Returns ``0`` when the grid starts inside a confirmed run and ``n``
+    when the last row is not shifted — both mean the boundary escaped the
+    grid.
+    """
+    if n <= 0 or not classify(n - 1):
+        return n
+    lo_known = -1                    # highest index known in-capacity
+    while True:
+        a, b = lo_known, n - 1
+        while b - a > 1:
+            mid = (a + b) // 2
+            if classify(mid):
+                b = mid
+            else:
+                a = mid
+        f = b
+        disconfirmed = False
+        for k in range(1, confirm + 1):
+            if f + k >= n:
+                break                # run reaches the grid end: accept
+            if not classify(f + k):
+                lo_known = f + k
+                disconfirmed = True
+                break
+        if not disconfirmed:
+            return f
+
+
+def sweep_grid(sweep_lo: int, sweep_hi: int, step: int,
+               max_points: int) -> tuple[np.ndarray, int]:
+    """The §IV-B.2 linear sweep grid with its coarsening rule.
+
+    Step = fetch granularity, coarsened (in multiples of ``step``) only when
+    the interval would need more than ``max_points`` rows.  Shared by the
+    dense sweep and the planner so both operate on the *same lattice*.
+    """
+    span = sweep_hi - sweep_lo
+    eff_step = step
+    if span // step > max_points:
+        eff_step = max(step, (span // max_points) // step * step)
+    sizes = np.arange(sweep_lo, sweep_hi + eff_step, eff_step, dtype=np.int64)
+    return sizes, eff_step
+
+
+def bisect_interval(shifted_at: Callable[[int], bool], first_bad: int,
+                    step: int) -> tuple[int, int]:
+    """§IV-B.1b binary search narrowing [first_bad/2, first_bad].
+
+    ``shifted_at(size)`` probes one size and classifies it against the
+    baseline.  Deterministic given the classifications, so the planner
+    replays it bit-for-bit (the probes fuse across families instead of
+    running back-to-back, but the sizes visited are identical).
+    """
+    last_good, bad = first_bad // 2, first_bad
+    while bad - last_good > max(8 * step, (bad + last_good) // 64):
+        mid = (last_good + bad) // 2
+        if shifted_at(mid):
+            bad = mid
+        else:
+            last_good = mid
+    return last_good, bad
+
+
+# Half-width (grid rows) of the boundary-detection window.  A shared
+# constant — NOT a knob — because the dense sweep and the planner must
+# evaluate the identical window for their answers to be identical.
+BOUNDARY_WINDOW = 6
+
+
+def _clamp_tails(reduced: np.ndarray) -> np.ndarray:
+    """Winsorize ~one point per tail before a change-point scan.
+
+    The two-sample K-S test has little power on short segments: on a
+    12-row boundary window the critical value approaches 1.0, so a single
+    injected outlier on the wrong side erases an otherwise perfect
+    rejection.  Clamping one point per tail restores the decision the
+    long-series scan would have made while leaving the series order — and
+    hence the detected index — untouched.  Deterministic and shared by
+    dense/planner, so it cannot break their identity."""
+    pct = min(100.0 / max(reduced.size, 1), 25.0)
+    return winsorize(reduced, pct=pct)
+
+
+def boundary_window(flip: int, n: int) -> tuple[int, int]:
+    """The [wa, wb) grid-index window the final detection runs over."""
+    return max(flip - BOUNDARY_WINDOW, 0), min(flip + BOUNDARY_WINDOW, n)
+
+
+def finalize_size(G: np.ndarray, wa: int, window_rows: np.ndarray,
+                  flip: int, widenings: int, n_samples: int,
+                  alpha: float) -> SizeResult | None:
+    """Build the SizeResult from the boundary window around the flip.
+
+    The classification descent *locates* the boundary window; the final
+    index comes from the paper's K-S change-point scan over the window's
+    reduced series.  Rationale: per-row classification compares rows
+    against a baseline from another launch, but the scan compares the
+    window's rows against each other — on measuring backends that makes
+    the final decision immune to whole-row scale drift (the window is
+    fetched as one launch), while on request-keyed runners dense and
+    planner see the identical window rows and therefore return the
+    identical size.  Returns ``None`` when the scan finds no change inside
+    the window (a mispositioned flip) — callers escalate to
+    ``rescue_change_point`` over the whole grid.
+    """
+    reduced = geometric_reduction(window_rows)
+    cp = ks_change_point_scan(_clamp_tails(reduced), alpha=alpha,
+                              min_segment=3)
+    if not (cp.found and 0 < cp.index < reduced.size):
+        # No change inside the window: the flip that positioned it is
+        # suspect — escalate to the full-grid rescue scan.
+        return None
+    cut = cp.index
+    confidence, pvalue = cp.confidence, cp.pvalue
+    cc = cusum_change_point(winsorize(reduced, pct=2.0))
+    # The parametric cross-check disagrees only when it *affirmatively*
+    # places the change elsewhere — CUSUM has limited power on a short
+    # window, and "found nothing" is absence of evidence, not a conflict.
+    agrees = (not cc.found) or abs(cc.index - cut) \
+        <= max(3, reduced.size // 10)
+    return SizeResult(int(G[wa + cut - 1]), True, confidence, pvalue,
+                      G[wa:wa + reduced.size], reduced, widenings, n_samples,
+                      cusum_agrees=bool(agrees))
+
+
+def widen_interval(sweep_lo: int, sweep_hi: int, eff_step: int, lo: int,
+                   max_bytes: int) -> tuple[int, int]:
+    """§IV-B.3: symmetric interval widening around the current sweep."""
+    span = max(sweep_hi - sweep_lo, eff_step * 8)
+    return (max(lo, sweep_lo - span // 2),
+            min(max_bytes, sweep_hi + span // 2))
+
+
+def ladder_rescue(ladder: list[int], rows: np.ndarray,
+                  alpha: float) -> int | None:
+    """Boundary octave from the doubling ladder's own rows (§IV-B.1a rescue).
+
+    When per-row classification finds no shifted rung — on measuring
+    backends, usually a poisoned baseline rather than a truly boundary-free
+    range — the ladder rows still contain the boundary as a step *between
+    rungs*, which the change-point scan detects without consulting the
+    baseline at all.  Returns the first-bad ladder size, or None when the
+    ladder genuinely shows no regime change.  Shared by the dense sweep and
+    the planner (same rows in, same octave out)."""
+    if len(ladder) < 4:
+        return None
+    reduced = geometric_reduction(np.stack(rows))
+    cp = ks_change_point_scan(_clamp_tails(reduced), alpha=alpha,
+                              min_segment=2)
+    if cp.found and 0 < cp.index < len(ladder):
+        return int(ladder[cp.index])
+    return None
+
+
+def rescue_change_point(G: np.ndarray, rows: np.ndarray, widenings: int,
+                        n_samples: int, alpha: float) -> SizeResult:
+    """Scale-immune rescue when the classification flip escapes the grid.
+
+    Per-row classification compares each row against a baseline measured in
+    a different launch; on measuring backends a sustained steal burst can
+    scale EVERY row of a search relative to that baseline and walk the flip
+    off the grid edge.  The paper's own change-point scan is immune to
+    exactly that failure (it compares the sweep's rows against each other,
+    and a batched sweep shares one launch), so it is kept as the last-resort
+    detector.  Shared by the dense sweep and the planner over the same grid
+    rows — identical inputs, identical rescue."""
+    reduced = geometric_reduction(rows)
+    cp = ks_change_point_scan(_clamp_tails(reduced), alpha=alpha,
+                              min_segment=3)
+    if not cp.found or cp.index <= 0:
+        return SizeResult(-1, False, 0.0, cp.pvalue, G, reduced,
+                          widenings, n_samples)
+    cc = cusum_change_point(winsorize(reduced, pct=2.0))
+    agrees = bool(cc.found and abs(cc.index - cp.index)
+                  <= max(3, reduced.size // 10))
+    return SizeResult(int(G[cp.index - 1]), True, cp.confidence, cp.pvalue,
+                      G, reduced, widenings, n_samples, cusum_agrees=agrees)
+
+
 def find_size(
     runner,
     space: str,
@@ -75,77 +342,95 @@ def find_size(
     max_widenings: int = 3,
     max_bytes: int | None = None,
     batched: bool = False,
+    budget=None,
 ) -> SizeResult:
     """Run the full §IV-B workflow against ``runner``/``space``.
 
     ``batched=True`` is the probe-engine fast path: the linear sweep (2) is
-    issued as one vectorized ``pchase_batch`` call and the change-point scan
-    (4) runs the vectorized K-S over the whole reduced series at once.  The
-    result is bit-identical to the sequential path.
+    issued as one vectorized ``pchase_batch`` call.  The result is
+    bit-identical to the sequential path (request-keyed sample streams).
+
+    ``budget`` (a ``SweepBudget``) switches to the adaptive coarse-to-fine
+    planner: the sweep lattice is *subsampled* instead of fully measured —
+    a chunked doubling ladder, the same binary bisection, then the
+    deterministic classification descent over the grid — cutting probed
+    rows ~4-8x while returning the identical discrete size (the dense sweep
+    stays available as the equivalence oracle behind ``budget=None``).
     """
+    if budget is not None:
+        from ..engine.planner import find_size_planned
+
+        return find_size_planned(runner, space, budget=budget, lo=lo,
+                                 step=step, n_samples=n_samples, alpha=alpha,
+                                 max_points=max_points,
+                                 max_widenings=max_widenings,
+                                 max_bytes=max_bytes)
     max_bytes = max_bytes or 64 * 1024 * KIB
 
     # -- (1a) exponential doubling until the distribution departs from baseline
     base = runner.pchase(space, lo, step, n_samples)
+    clf = ShiftClassifier(base, alpha, classification_jump(runner))
     size = lo
     first_bad = None
+    ladder: list[int] = []
+    ladder_rows: list[np.ndarray] = []
     while size <= max_bytes:
         size *= 2
         cur = runner.pchase(space, size, step, n_samples)
-        if _distribution_shifted(base, cur, alpha):
+        ladder.append(size)
+        ladder_rows.append(cur)
+        if clf.shifted(cur):
             first_bad = size
             break
+    if first_bad is None:
+        first_bad = ladder_rescue(ladder, ladder_rows, alpha)
     if first_bad is None:
         return SizeResult(-1, False, 0.0, 1.0, np.zeros(0), np.zeros(0), 0, n_samples)
 
     # -- (1b) binary search to narrow [last_good, first_bad]
-    last_good, bad = first_bad // 2, first_bad
-    while bad - last_good > max(8 * step, (bad + last_good) // 64):
-        mid = (last_good + bad) // 2
-        cur = runner.pchase(space, mid, step, n_samples)
-        if _distribution_shifted(base, cur, alpha):
-            bad = mid
-        else:
-            last_good = mid
-    sweep_lo, sweep_hi = last_good, bad
+    def shifted_at(size: int) -> bool:
+        return clf.shifted(runner.pchase(space, int(size), step, n_samples))
+
+    sweep_lo, sweep_hi = bisect_interval(shifted_at, first_bad, step)
 
     widenings = 0
     while True:
         # -- (2) linear sweep, step = fetch granularity (coarsen if too wide)
-        span = sweep_hi - sweep_lo
-        eff_step = step
-        if span // step > max_points:
-            eff_step = max(step, (span // max_points) // step * step)
-        sizes = np.arange(sweep_lo, sweep_hi + eff_step, eff_step, dtype=np.int64)
+        sizes, eff_step = sweep_grid(sweep_lo, sweep_hi, step, max_points)
         rows = sweep_rows(runner, space, sizes, step, n_samples,
                           batched=batched)
 
-        # -- (4) reduce + K-S change point
-        reduced = geometric_reduction(rows)
-        cp_scan = ks_change_point_scan if batched else ks_change_point
-        cp = cp_scan(reduced, alpha=alpha, min_segment=3)
+        # -- (4) the classification flip over the grid (see module docstring)
+        memo: dict[int, bool] = {}
 
-        # -- (3) outlier / boundary check -> widen interval and re-sweep
-        need_widen = (not cp.found) or boundary_suspect(reduced) or \
-                     cp.index <= 2 or cp.index >= sizes.size - 2
-        if need_widen and widenings < max_widenings:
+        def classify(i: int) -> bool:
+            if i not in memo:
+                memo[i] = clf.shifted(rows[i])
+            return memo[i]
+
+        flip = descend_first_shifted(classify, sizes.size)
+
+        # -- (3) boundary near the interval edge -> widen and re-sweep
+        if (flip <= 2 or flip >= sizes.size - 2) and widenings < max_widenings:
             widenings += 1
-            span = max(span, eff_step * 8)
-            sweep_lo = max(lo, sweep_lo - span // 2)
-            sweep_hi = min(max_bytes, sweep_hi + span // 2)
+            sweep_lo, sweep_hi = widen_interval(sweep_lo, sweep_hi, eff_step,
+                                                lo, max_bytes)
             continue
-
-        if not cp.found:
-            return SizeResult(-1, False, 0.0, cp.pvalue, sizes, reduced,
-                              widenings, n_samples)
-        # cp.index is the first size in the *miss* regime; the capacity is the
-        # last size that still fits.
-        detected = int(sizes[max(cp.index - 1, 0)])
-        # Parametric cross-check (CUSUM on the winsorized reduction): the two
-        # detectors agreeing within a few grid steps raises confidence in the
-        # non-parametric result; disagreement is surfaced to the caller.
-        cc = cusum_change_point(winsorize(reduced, pct=2.0))
-        agrees = bool(cc.found and abs(cc.index - cp.index)
-                      <= max(3, sizes.size // 10))
-        return SizeResult(detected, True, cp.confidence, cp.pvalue, sizes,
-                          reduced, widenings, n_samples, cusum_agrees=agrees)
+        if 0 < flip < sizes.size:
+            wa, wb = boundary_window(flip, sizes.size)
+            result = finalize_size(sizes, wa, rows[wa:wb], flip, widenings,
+                                   n_samples, alpha)
+        else:
+            result = None
+        if result is None:
+            result = rescue_change_point(sizes, rows, widenings, n_samples,
+                                         alpha)
+        if not result.found and widenings < max_widenings:
+            # No statistically significant change anywhere: a wider grid
+            # gives the K-S scan more points per segment (its power on
+            # short series is poor — paper §IV-B step 3's re-measure loop).
+            widenings += 1
+            sweep_lo, sweep_hi = widen_interval(sweep_lo, sweep_hi, eff_step,
+                                                lo, max_bytes)
+            continue
+        return result

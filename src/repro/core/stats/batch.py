@@ -173,8 +173,11 @@ def classify_miss_rows(rows: np.ndarray, hit_ref: np.ndarray,
     is_miss = differs_hit & ~differs_miss
     ambiguous = ~(differs_hit ^ differs_miss)
     if np.any(ambiguous):
-        pm = np.median(rows[ambiguous], axis=1)
-        hm = float(np.median(hit_ref))
-        mm = float(np.median(miss_ref))
-        is_miss[ambiguous] = np.abs(pm - mm) < np.abs(pm - hm)
+        # Median proximity in LOG space, matching ``amount._is_miss``:
+        # multiplicative drift on measuring backends scales whole rows, and
+        # the log distance keeps the hit/miss midpoint drift-symmetric.
+        pm = np.maximum(np.median(rows[ambiguous], axis=1), 1e-12)
+        hm = max(float(np.median(hit_ref)), 1e-12)
+        mm = max(float(np.median(miss_ref)), 1e-12)
+        is_miss[ambiguous] = np.abs(np.log(pm / mm)) < np.abs(np.log(pm / hm))
     return is_miss

@@ -15,11 +15,17 @@ from check_regression import (GateReport, as_number, compare,  # noqa: E402
                               parse_derived)
 
 BASELINE = [
-    {"name": "engine_speedup", "us": 240000.0,
-     "derived": "legacy=530000us_speedup=2.20x_identical=True"},
+    {"name": "engine_speedup", "us": 160000.0,
+     "derived": "legacy=560000us_speedup=3.60x_identical=True"},
+    {"name": "adaptive_speedup", "us": 300000.0,
+     "derived": "rows_dense=4800_rows_planned=3300_row_ratio=1.45x_"
+                "identical=True"},
     {"name": "topology_query", "us": 600.0,
      "derived": "cold=320000us_warm_speedup=500.0x_batched_qps=170000_"
                 "found=2000/2000_identical=True"},
+    {"name": "pallas_interp", "us": 3000000.0,
+     "derived": "discrete_ok=True_store_hit=True_warm_speedup=9000.0x_"
+                "kernel_calls=800"},
 ]
 
 
@@ -59,21 +65,47 @@ class TestCompareRules:
 
     def test_ratio_regression_fails(self):
         report = compare(_rows(
-            engine_speedup="legacy=530000us_speedup=1.40x_identical=True"),
+            engine_speedup="legacy=530000us_speedup=2.40x_identical=True"),
             BASELINE)
         assert not report.ok
         assert any("speedup regressed" in f for f in report.failures)
 
     def test_small_ratio_drift_passes(self):
         assert compare(_rows(
-            engine_speedup="legacy=530000us_speedup=1.90x_identical=True"),
+            engine_speedup="legacy=530000us_speedup=3.30x_identical=True"),
             BASELINE).ok
+
+    def test_engine_speedup_hard_floor(self):
+        """ISSUE 4 acceptance: engine >=3x over legacy, outright."""
+        report = compare(_rows(
+            engine_speedup="legacy=530000us_speedup=2.95x_identical=True"),
+            BASELINE)
+        assert any("below hard floor" in f for f in report.failures)
 
     def test_correctness_flip_fails(self):
         report = compare(_rows(
-            engine_speedup="legacy=530000us_speedup=2.20x_identical=False"),
+            engine_speedup="legacy=530000us_speedup=3.60x_identical=False"),
             BASELINE)
         assert any("identical" in f for f in report.failures)
+
+    def test_planner_identity_flip_fails(self):
+        report = compare(_rows(
+            adaptive_speedup="rows_dense=4800_rows_planned=3300_"
+                             "row_ratio=1.45x_identical=False"), BASELINE)
+        assert any("identical" in f for f in report.failures)
+
+    def test_kernel_calls_ceiling_and_regression(self):
+        """ISSUE 4 acceptance: pallas_interp kernel_calls <= 950, and
+        creeping regressions beyond tol hard-fail even under the ceiling."""
+        report = compare(_rows(
+            pallas_interp="discrete_ok=True_store_hit=True_"
+                          "warm_speedup=9000.0x_kernel_calls=1200"), BASELINE)
+        assert any("above hard ceiling" in f for f in report.failures)
+        assert any("kernel_calls regressed" in f for f in report.failures)
+        report = compare(_rows(
+            pallas_interp="discrete_ok=True_store_hit=True_"
+                          "warm_speedup=9000.0x_kernel_calls=850"), BASELINE)
+        assert report.ok                  # within tol and under the ceiling
 
     def test_found_fraction_drop_fails(self):
         report = compare(_rows(
