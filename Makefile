@@ -9,12 +9,17 @@
 #                     committed BENCH_BASELINE.json budgets
 #   make discover-pallas — discovery through the real Pallas probe kernels
 #                     (interpret mode), report printed as markdown
+#   make serve      — HTTP front end over a populated topology store
+#                     (examples/serve_topologies.py; STORE=dir PORT=n)
+#   make test-serve — the live-server HTTP lane only
 
 PY      ?= python
 PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+PORT    ?= 8423
 
-.PHONY: test test-fast test-engine bench bench-gate discover-pallas
+.PHONY: test test-fast test-engine test-serve bench bench-gate \
+	discover-pallas serve
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -27,15 +32,23 @@ test-engine:
 		tests/test_stats.py tests/test_discovery.py \
 		tests/test_runner_protocol.py
 
+test-serve:
+	$(ENV) $(PYTEST) -q tests/test_http_serve.py \
+		tests/test_topology_service.py tests/test_store.py
+
 bench:
 	$(ENV) $(PY) benchmarks/run.py
 
 bench-gate:
 	$(PY) benchmarks/check_regression.py --self-test
 	$(ENV) $(PY) benchmarks/run.py --json \
-		--only engine_speedup,adaptive_speedup,topology_query,pallas_interp \
+		--only engine_speedup,adaptive_speedup,topology_query,pallas_interp,topology_http \
 		--out bench_current.json
 	$(PY) benchmarks/check_regression.py bench_current.json BENCH_BASELINE.json
 
 discover-pallas:
 	$(ENV) $(PY) examples/discover_topology.py --device pallas --markdown
+
+serve:
+	$(ENV) $(PY) examples/serve_topologies.py --populate --port $(PORT) \
+		$(if $(STORE),--store $(STORE),)

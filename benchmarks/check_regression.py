@@ -54,6 +54,15 @@ GATES: dict[str, dict] = {
         "fractions": ("found",),
         "warn_metrics": ("batched_qps",),
     },
+    # ISSUE 6 tentpole row: the HTTP front end under concurrent batched
+    # traffic.  Correctness hard-gated (every lookup found, zero transport/
+    # 5xx errors); qps and latency percentiles warn-only at first — they
+    # measure the CI box's loopback + GIL, not the serving design.
+    "topology_http": {
+        "bools": ("ok",),
+        "fractions": ("found",),
+        "warn_metrics": ("batched_qps",),
+    },
     # Pallas-interpret backend: correctness hard-gated (discovered discrete
     # attributes vs configured ground truth; store hit serving the identical
     # document), wall time warn-only — interpret-mode kernel timings
@@ -224,6 +233,9 @@ def self_test() -> int:
         {"name": "pallas_interp", "us": 3000000.0,
          "derived": "discrete_ok=True_store_hit=True_warm_speedup=9000.0x_"
                      "kernel_calls=800"},
+        {"name": "topology_http", "us": 4000000.0,
+         "derived": "batched_qps=60000_p50=6000us_p99=15000us_"
+                     "found=4000/4000_errors=0_ok=True"},
     ]
     clean = [
         {"name": "engine_speedup", "us": 170000.0,
@@ -237,6 +249,9 @@ def self_test() -> int:
         {"name": "pallas_interp", "us": 3400000.0,    # slower wall: warn only
          "derived": "discrete_ok=True_store_hit=True_warm_speedup=8421.7x_"
                      "kernel_calls=812"},
+        {"name": "topology_http", "us": 4200000.0,    # slower qps: warn only
+         "derived": "batched_qps=41000_p50=8000us_p99=22000us_"
+                     "found=4000/4000_errors=0_ok=True"},
     ]
     speed_regressed = json.loads(json.dumps(clean))
     speed_regressed[0]["derived"] = \
@@ -259,6 +274,12 @@ def self_test() -> int:
     floor_3x_broken = json.loads(json.dumps(clean))
     floor_3x_broken[0]["derived"] = \
         "legacy=540000us_speedup=2.95x_identical=True"     # under hard floor
+    http_broken = json.loads(json.dumps(clean))
+    http_broken[4]["derived"] = http_broken[4]["derived"] \
+        .replace("errors=0_ok=True", "errors=3_ok=False")
+    http_lost = json.loads(json.dumps(clean))
+    http_lost[4]["derived"] = http_lost[4]["derived"] \
+        .replace("found=4000/4000", "found=3950/4000")
 
     checks = [
         ("clean run passes", compare(clean, baseline).ok, True),
@@ -276,6 +297,10 @@ def self_test() -> int:
          compare(volume_regressed, baseline).ok, False),
         ("engine speedup under 3x hard floor fails",
          compare(floor_3x_broken, baseline).ok, False),
+        ("http serving errors fail",
+         compare(http_broken, baseline).ok, False),
+        ("http found-fraction drop fails",
+         compare(http_lost, baseline).ok, False),
     ]
     bad = [label for label, got, want in checks if got != want]
     for label, got, want in checks:

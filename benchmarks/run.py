@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows (assignment deliverable (d)).
   kernels            — Pallas kernels vs refs (correctness + ref wall time)
   train_step         — tiny end-to-end train step wall time
   topology_query     — cold discovery vs warm store hit vs batched queries
+  topology_http      — live HTTP front end: concurrent batched qps +
+                       p50/p99 request latency (correctness hard-gated)
   adaptive_speedup   — probe rows: adaptive sweep planner vs dense sweeps
                        (discrete attributes must be identical)
   pallas_interp      — third-backend discovery through the real Pallas
@@ -355,6 +357,67 @@ def bench_topology_query() -> None:
             f"identical={identical}")
 
 
+def bench_topology_http() -> None:
+    """ISSUE 6 tentpole row: the HTTP front end under concurrent batched
+    traffic.  Correctness fields (hard-gated): every lookup found, zero
+    transport/5xx errors (``ok``).  Throughput (``batched_qps``) and the
+    per-request latency percentiles are warn-only at first — they
+    characterize the CI box's loopback + GIL, not the serving design."""
+    import tempfile
+    import threading
+
+    from repro.core import discover_sim, make_h100_like, make_mi210_like
+    from repro.core.engine.store import TopologyStore
+    from repro.serve import TopologyClient, TopologyHTTPServer
+
+    with tempfile.TemporaryDirectory() as td:
+        store = TopologyStore(td)
+        discover_sim(make_h100_like(seed=49), n_samples=9, store=store)
+        discover_sim(make_mi210_like(seed=49), n_samples=9, store=store)
+
+        paths = ("L1.size", "L2.load_latency", "hbm.bandwidth",
+                 "DeviceMemory.read_bw", "general.clock_domain")
+        with TopologyHTTPServer(store) as server:
+            keys = store.keys()
+            batch = [(k, p) for k in keys for p in paths] * 10   # 100 pairs
+            n_threads, n_reqs = 4, 10
+            latencies: list[list[float]] = [[] for _ in range(n_threads)]
+            found = [0] * n_threads
+            errors = [0] * n_threads
+
+            def worker(tid: int) -> None:
+                client = TopologyClient(server.url)
+                for _ in range(n_reqs):
+                    t0 = time.perf_counter()
+                    try:
+                        results = client.query_batch(batch)
+                        found[tid] += sum(r["found"] for r in results)
+                    except Exception:   # noqa: BLE001 — counted, gated
+                        errors[tid] += 1
+                    latencies[tid].append(time.perf_counter() - t0)
+
+            TopologyClient(server.url).query_batch(batch[:10])   # warm
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(n_threads)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall_s = time.perf_counter() - t0
+
+        lat_us = np.sort(np.concatenate(latencies)) * 1e6
+        total = len(batch) * n_threads * n_reqs
+        total_found = sum(found)
+        total_errors = sum(errors)
+        ok = total_found == total and total_errors == 0
+        row("topology_http", wall_s * 1e6,
+            f"batched_qps={total/wall_s:.0f}_"
+            f"p50={np.percentile(lat_us, 50):.0f}us_"
+            f"p99={np.percentile(lat_us, 99):.0f}us_"
+            f"found={total_found}/{total}_errors={total_errors}_ok={ok}")
+
+
 # ------------------------------------------------------------- framework
 def bench_roofline() -> None:
     """Roofline terms per (arch x shape) from the dry-run artifacts."""
@@ -423,7 +486,8 @@ def bench_train_step() -> None:
 ALL_BENCHES = (bench_table1_coverage, bench_table3_validation,
                bench_fig2_reduction, bench_runtime_breakdown,
                bench_engine_speedup, bench_adaptive_speedup,
-               bench_topology_query, bench_pallas_interp, bench_fig5_stream,
+               bench_topology_query, bench_topology_http,
+               bench_pallas_interp, bench_fig5_stream,
                bench_perfmodel, bench_link_adjacency, bench_roofline,
                bench_kernels, bench_train_step)
 

@@ -1,0 +1,80 @@
+"""Serve a topology store over HTTP (the MT4G §V consumption path).
+
+    PYTHONPATH=src python examples/serve_topologies.py --store /tmp/topo-store
+    PYTHONPATH=src python examples/serve_topologies.py --populate --port 8423
+
+Starts the threaded JSON front end (``repro.serve.TopologyHTTPServer``)
+over a persistent ``TopologyStore``.  ``--populate`` discovers the two
+simulated validation devices into the store first if it is empty, so a
+fresh checkout can demo the full loop:
+
+    curl -s localhost:8423/topologies | python -m json.tool
+    curl -s "localhost:8423/topologies/<key>/query?path=L1.size"
+    curl -s localhost:8423/metrics | python -m json.tool
+
+Runs until interrupted; Ctrl-C drains in-flight requests before exiting.
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.core import discover_sim, make_h100_like, make_mi210_like
+from repro.core.engine.store import TopologyStore
+from repro.serve import TopologyHTTPServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="topology store directory (default: a temp dir)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8423,
+                    help="listen port (0 = ephemeral)")
+    ap.add_argument("--hot-set", type=int, default=8,
+                    help="LRU hot-set size of the query service")
+    ap.add_argument("--populate", action="store_true",
+                    help="discover the simulated validation devices into "
+                         "the store first when it is empty")
+    ap.add_argument("--samples", type=int, default=9)
+    args = ap.parse_args()
+
+    root = args.store or tempfile.mkdtemp(prefix="mt4g-store-")
+    store = TopologyStore(root)
+    if args.populate and not store.keys():
+        print(f"# populating {root} from the simulated validation devices",
+              file=sys.stderr)
+        for make, seed in ((make_h100_like, 71), (make_mi210_like, 72)):
+            topo, _ = discover_sim(make(seed=seed), n_samples=args.samples,
+                                   store=store)
+            print(f"#   discovered {topo.model}", file=sys.stderr)
+    if not store.keys():
+        print(f"# warning: store {root} is empty — every key lookup will "
+              f"404 (use --populate or discover with --store first)",
+              file=sys.stderr)
+
+    server = TopologyHTTPServer(store, host=args.host, port=args.port,
+                                hot_set=args.hot_set)
+    server.start()
+    print(f"# serving {len(store.keys())} topologies on {server.url} "
+          f"(store: {root})", file=sys.stderr)
+    print(f"#   try: curl -s {server.url}/topologies", file=sys.stderr)
+    try:
+        while True:
+            server._thread.join(timeout=3600)
+    except KeyboardInterrupt:
+        print("\n# draining in-flight requests (Ctrl-C again to abandon)...",
+              file=sys.stderr)
+        try:
+            server.stop()
+        except KeyboardInterrupt:
+            # terminals deliver Ctrl-C to the whole process group, so a
+            # second interrupt mid-drain is common — abandon, don't traceback
+            print("# abandoning drain", file=sys.stderr)
+            sys.exit(130)
+        print(f"# final stats: {server.service.stats()}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

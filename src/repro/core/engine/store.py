@@ -64,6 +64,14 @@ class StoreLock:
     Fallback: an exclusive-create lockfile holding the owner pid, polled
     with a timeout; locks older than ``stale_seconds`` are broken (the
     holder crashed before unlinking).
+
+    File locks only order *processes* reliably: ``flock`` semantics between
+    two descriptors in one process are platform-dependent (fcntl-emulated
+    flock — NFS mounts, some libcs — treats record locks as per-process, so
+    a second thread "acquires" immediately), and the fallback's stale-break
+    can unlink a lockfile a sibling thread just created.  A process-wide
+    ``threading.Lock`` layered *under* the file lock serializes threads
+    first, so the file lock only ever arbitrates between processes.
     """
 
     def __init__(self, path: str, *, timeout: float = 30.0,
@@ -73,6 +81,7 @@ class StoreLock:
         self.poll = poll
         self.stale_seconds = stale_seconds
         self._tls = threading.local()
+        self._thread_gate = threading.Lock()
 
     @property
     def _depth(self) -> int:
@@ -82,7 +91,8 @@ class StoreLock:
         if self._depth:                                # re-entrant
             self._tls.depth += 1
             return
-        if fcntl is not None:
+        self._thread_gate.acquire()                    # threads first...
+        if fcntl is not None:                          # ...then processes
             fd = os.open(self.path, os.O_CREAT | os.O_RDWR, 0o644)
             fcntl.flock(fd, fcntl.LOCK_EX)
             self._tls.fd = fd
@@ -104,6 +114,7 @@ class StoreLock:
                     except OSError:
                         continue
                     if time.monotonic() > deadline:
+                        self._thread_gate.release()
                         raise TimeoutError(
                             f"store lock busy for >{self.timeout}s: "
                             f"{self.path}")
@@ -120,13 +131,16 @@ class StoreLock:
         self._tls.fd = None
         if fd is None:
             return
-        if fcntl is not None:
-            fcntl.flock(fd, fcntl.LOCK_UN)
-            os.close(fd)
-        else:
-            os.close(fd)
-            with contextlib.suppress(OSError):
-                os.unlink(self.path)
+        try:
+            if fcntl is not None:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+                os.close(fd)
+            else:
+                os.close(fd)
+                with contextlib.suppress(OSError):
+                    os.unlink(self.path)
+        finally:
+            self._thread_gate.release()
 
     @property
     def held(self) -> bool:
@@ -290,6 +304,35 @@ class TopologyStore:
 
     def has(self, key: str) -> bool:
         return os.path.exists(self._topo_path(key))
+
+    def generation(self, key: str) -> tuple | None:
+        """Opaque freshness token for ``key``'s on-disk document, or None
+        when the key has no document (never stored, GC'd, or quarantined).
+
+        Derived from the file's stat identity (mtime_ns + size + inode), so
+        it changes on every ``put`` — including cross-process writers the
+        in-process service never saw — and disappears on eviction.  Callers
+        caching deserialized topologies (``TopologyService``'s LRU) compare
+        tokens to decide whether a cached object may still be served.
+        """
+        try:
+            st = os.stat(self._topo_path(key))
+        except OSError:
+            return None
+        return (st.st_mtime_ns, st.st_size, st.st_ino)
+
+    def is_quarantined(self, key: str) -> bool:
+        """True when ``key``'s topology document was moved to ``corrupt/``
+        (and no fresh document has replaced it) — the serving layer maps
+        this to 503-retry-later rather than 404-unknown."""
+        if self.has(key):
+            return False
+        prefix = f"{key}.json."
+        try:
+            names = os.listdir(self._corrupt_dir)
+        except OSError:
+            return False
+        return any(n.startswith(prefix) for n in names)
 
     def delete(self, key: str) -> None:
         with self._lock:

@@ -1,6 +1,10 @@
+from .client import TopologyClient, TopologyHTTPError
 from .engine import Engine, ServeConfig
+from .http import HttpError, ServerMetrics, TopologyHTTPServer
 from .topology_service import (AttrDelta, QueryResult, TopologyDiff,
                                TopologyService)
 
 __all__ = ["Engine", "ServeConfig",
-           "AttrDelta", "QueryResult", "TopologyDiff", "TopologyService"]
+           "AttrDelta", "QueryResult", "TopologyDiff", "TopologyService",
+           "HttpError", "ServerMetrics", "TopologyHTTPServer",
+           "TopologyClient", "TopologyHTTPError"]

@@ -1,0 +1,100 @@
+"""Small stdlib client for the topology HTTP front end (``serve/http.py``).
+
+Mirrors the server's endpoint surface one method per endpoint, speaking the
+same JSON shapes; non-2xx responses raise ``TopologyHTTPError`` carrying
+the structured error payload (and the ``Retry-After`` hint on 503s), so
+callers can distinguish retry-later from wrong-request without parsing
+message strings.
+"""
+from __future__ import annotations
+
+import json
+import urllib.error
+import urllib.request
+from urllib.parse import quote, urlencode
+
+__all__ = ["TopologyHTTPError", "TopologyClient"]
+
+
+class TopologyHTTPError(Exception):
+    """A non-2xx response from the topology server."""
+
+    def __init__(self, status: int, payload: dict,
+                 retry_after_s: float | None = None):
+        super().__init__(f"HTTP {status}: {payload.get('error', payload)}")
+        self.status = status
+        self.payload = payload
+        self.retry_after_s = retry_after_s
+
+
+class TopologyClient:
+    """Client for one topology server, e.g. ``TopologyClient(server.url)``."""
+
+    def __init__(self, base_url: str, timeout_s: float = 10.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout_s = timeout_s
+
+    # ------------------------------------------------------------ plumbing
+    def _request(self, path: str, params: dict | None = None,
+                 body: dict | None = None) -> dict:
+        url = f"{self.base_url}{path}"
+        if params:
+            url += "?" + urlencode({k: v for k, v in params.items()
+                                    if v is not None})
+        data = None
+        headers = {}
+        if body is not None:
+            data = json.dumps(body).encode()
+            headers["Content-Type"] = "application/json"
+        req = urllib.request.Request(url, data=data, headers=headers)
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
+                return json.loads(resp.read())
+        except urllib.error.HTTPError as e:
+            try:
+                payload = json.loads(e.read())
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                payload = {"error": str(e)}
+            retry_after = e.headers.get("Retry-After")
+            raise TopologyHTTPError(
+                e.code, payload,
+                float(retry_after) if retry_after else None) from None
+
+    @staticmethod
+    def _k(key: str) -> str:
+        return quote(key, safe="")
+
+    # ----------------------------------------------------------- endpoints
+    def healthz(self) -> dict:
+        return self._request("/healthz")
+
+    def metrics(self) -> dict:
+        return self._request("/metrics")
+
+    def topologies(self) -> list[dict]:
+        return self._request("/topologies")["topologies"]
+
+    def topology(self, key: str) -> dict:
+        return self._request(f"/topologies/{self._k(key)}")
+
+    def query(self, key: str, path: str) -> dict:
+        return self._request(f"/topologies/{self._k(key)}/query",
+                             params={"path": path})
+
+    def query_batch(self, pairs) -> list[dict]:
+        body = {"requests": [[k, p] for k, p in pairs]}
+        return self._request("/query_batch", body=body)["results"]
+
+    def attributes(self, key: str, *, provenance: str | None = None,
+                   min_confidence: float | None = None) -> list[dict]:
+        return self._request(
+            f"/topologies/{self._k(key)}/attributes",
+            params={"provenance": provenance,
+                    "min_confidence": min_confidence})["attributes"]
+
+    def adjacency(self, key: str) -> dict:
+        return self._request(f"/adjacency/{self._k(key)}")["adjacency"]
+
+    def diff(self, key_a: str, key_b: str, rel_tol: float = 0.0) -> dict:
+        return self._request("/diff", params={"a": key_a, "b": key_b,
+                                              "rel_tol": rel_tol})

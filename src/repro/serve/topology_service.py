@@ -24,6 +24,7 @@ an HTTP front end would wrap, exercised directly by tests and benchmarks.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -88,30 +89,52 @@ class TopologyDiff:
 
 
 class TopologyService:
-    """Query front end over a ``TopologyStore`` with an LRU hot set."""
+    """Query front end over a ``TopologyStore`` with an LRU hot set.
+
+    Safe under concurrent callers (the threaded HTTP front end): all LRU
+    mutation and the hit/miss counters sit behind an internal lock, and
+    every cached topology is validated against the store's per-key
+    *generation* token before being served — a ``discover(refresh=True)``
+    rewrite, a ``gc()`` eviction, or a cross-process writer invalidates the
+    hot-set entry instead of pinning the stale object forever.
+    """
 
     def __init__(self, store, hot_set: int = 8):
         self.store = store
         self.hot_set = max(int(hot_set), 1)
-        self._lru: OrderedDict[str, Topology] = OrderedDict()
+        # key -> (store generation at load time, deserialized topology)
+        self._lru: OrderedDict[str, tuple[object, Topology]] = OrderedDict()
+        self._mutex = threading.Lock()
         self.lru_hits = 0
         self.lru_misses = 0
 
     # ----------------------------------------------------------- loading
     def get(self, key: str) -> Topology | None:
-        """The topology for ``key``, through the LRU hot set."""
-        topo = self._lru.get(key)
-        if topo is not None:
-            self.lru_hits += 1
-            self._lru.move_to_end(key)
-            return topo
-        self.lru_misses += 1
+        """The topology for ``key``, through the generation-checked LRU."""
+        with self._mutex:
+            cached = self._lru.get(key)
+            if cached is not None:
+                gen, topo = cached
+                if self.store.generation(key) == gen:
+                    self.lru_hits += 1
+                    self._lru.move_to_end(key)
+                    return topo
+                del self._lru[key]      # refreshed, GC'd, or quarantined
+            self.lru_misses += 1
+        # Disk read outside the mutex so misses on different keys do not
+        # serialize on each other.  The generation is snapshotted *before*
+        # the read: if a writer lands in between, the fresh object is cached
+        # under the pre-write token and simply reloads on the next request —
+        # the stale direction (new token, old object) cannot happen.
+        gen = self.store.generation(key)
         entry = self.store.get(key)
         if entry is None:
             return None
-        self._lru[key] = entry.topology
-        while len(self._lru) > self.hot_set:
-            self._lru.popitem(last=False)
+        with self._mutex:
+            self._lru[key] = (gen, entry.topology)
+            self._lru.move_to_end(key)
+            while len(self._lru) > self.hot_set:
+                self._lru.popitem(last=False)
         return entry.topology
 
     def keys(self) -> list[str]:
@@ -265,8 +288,10 @@ class TopologyService:
 
     # ------------------------------------------------------------- stats
     def stats(self) -> dict:
-        return {"lru_hits": self.lru_hits, "lru_misses": self.lru_misses,
-                "hot_set": len(self._lru), "store": self.store.stats()}
+        with self._mutex:
+            return {"lru_hits": self.lru_hits,
+                    "lru_misses": self.lru_misses,
+                    "hot_set": len(self._lru), "store": self.store.stats()}
 
 
 def _rel_delta(a, b) -> float | None:

@@ -1,6 +1,8 @@
 """Query-service tests: dotted-path lookups with aliases, batched lookup
-grouping, the LRU hot set, provenance/confidence filters, adjacency, and
-the topology diff endpoint."""
+grouping, the LRU hot set (generation-validated and thread-safe),
+provenance/confidence filters, adjacency, and the topology diff endpoint."""
+import threading
+
 import pytest
 
 from repro.core import discover_sim, make_h100_like, make_mi210_like
@@ -95,6 +97,122 @@ class TestHotSet:
             svc.get(k)
         assert store.hits == before
         assert svc.stats()["lru_hits"] == 10
+
+
+class TestHotSetFreshness:
+    """ISSUE 6 satellite: the LRU must never serve a dead generation —
+    a refresh rewrite, a GC eviction, or a quarantine invalidates the
+    cached object instead of pinning it forever."""
+
+    def test_refresh_under_live_service_serves_the_new_value(self, tmp_path):
+        store = TopologyStore(str(tmp_path / "fresh"))
+        dev = make_h100_like(seed=91)
+        discover_sim(dev, n_samples=9, store=store)
+        key = store.keys()[0]
+
+        svc = TopologyService(store, hot_set=4)
+        stale = svc.query(key, "L1.load_latency")
+        assert stale.found
+        assert svc.query(key, "L1.load_latency").value == stale.value  # hot
+
+        # refresh=True re-measures and rewrites the same content-addressed
+        # key; same request => same values, but the service must reload.
+        misses_before = svc.stats()["lru_misses"]
+        discover_sim(dev, n_samples=9, store=store, refresh=True)
+        assert svc.query(key, "L1.load_latency").value == stale.value
+        assert svc.stats()["lru_misses"] > misses_before
+
+        # a divergent rewrite (new driver/firmware run) is visible at once
+        entry = store.get(key)
+        entry.topology.find_memory("L1").set("load_latency", 777.5, "cyc",
+                                             "benchmark")
+        store.put(key, entry.topology, meta=entry.meta)
+        assert svc.query(key, "L1.load_latency").value == 777.5
+
+    def test_gc_eviction_stops_serving_the_cached_object(self, tmp_path):
+        store = TopologyStore(str(tmp_path / "gcd"))
+        discover_sim(make_h100_like(seed=92), n_samples=9, store=store)
+        key = store.keys()[0]
+        svc = TopologyService(store)
+        assert svc.get(key) is not None           # hot
+        store.gc(max_entries=0)
+        assert svc.get(key) is None               # evicted, not stale-served
+
+    def test_cross_process_writer_is_visible(self, tmp_path):
+        """A second store handle on the same root (another process's view)
+        rewriting a key invalidates this service's hot entry."""
+        root = str(tmp_path / "shared")
+        store = TopologyStore(root)
+        discover_sim(make_h100_like(seed=93), n_samples=9, store=store)
+        key = store.keys()[0]
+        svc = TopologyService(store)
+        svc.get(key)                              # hot
+
+        other = TopologyStore(root)
+        entry = other.get(key)
+        entry.topology.find_memory("L1").set("size", 12345, "B", "benchmark")
+        other.put(key, entry.topology, meta=entry.meta)
+        assert svc.query(key, "L1.size").value == 12345
+
+
+class TestThreadSafety:
+    """ISSUE 6 satellite: LRU mutation and the hit/miss counters sit
+    behind a lock — a threaded front end cannot corrupt them."""
+
+    N_THREADS = 8
+    QUERIES_PER_THREAD = 200
+
+    def test_hammer_counters_sum_and_no_lost_entries(self, store):
+        svc = TopologyService(store, hot_set=1)    # max eviction contention
+        keys = store.keys()
+        errors = []
+
+        def hammer(tid):
+            try:
+                for i in range(self.QUERIES_PER_THREAD):
+                    k = keys[(tid + i) % len(keys)]
+                    assert svc.get(k) is not None
+            except Exception as e:      # noqa: BLE001 — surfaced below
+                errors.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(i,))
+                   for i in range(self.N_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors
+        stats = svc.stats()
+        # no lost counter increments: hits + misses == total get() calls
+        assert stats["lru_hits"] + stats["lru_misses"] == \
+            self.N_THREADS * self.QUERIES_PER_THREAD
+        # the LRU respected its bound under contention
+        assert stats["hot_set"] <= 1
+        # and the store still serves every entry (nothing corrupted/lost)
+        for k in keys:
+            assert svc.query(k, "general.clock_domain").found
+
+    def test_concurrent_query_batch_alignment(self, store):
+        svc = TopologyService(store, hot_set=2)
+        keys = store.keys()
+        reqs = [(k, p) for k in keys
+                for p in ("L2.load_latency", "hbm.bandwidth")] * 10
+        bad = []
+
+        def batch(_tid):
+            for _ in range(20):
+                answers = svc.query_batch(reqs)
+                if not all(a.found and (a.key, a.path) == r
+                           for a, r in zip(answers, reqs)):
+                    bad.append(answers)
+
+        threads = [threading.Thread(target=batch, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not bad
 
 
 class TestFiltersAndAdjacency:
