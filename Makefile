@@ -10,8 +10,10 @@
 #   make discover-pallas — discovery through the real Pallas probe kernels
 #                     (interpret mode), report printed as markdown
 #   make serve      — HTTP front end over a populated topology store
-#                     (examples/serve_topologies.py; STORE=dir PORT=n)
-#   make test-serve — the live-server HTTP lane only
+#                     (examples/serve_topologies.py; STORE=dir PORT=n
+#                     AUTH_TOKEN=secret WORKERS=n for remote discovery)
+#   make test-serve — the live-server HTTP + remote-discovery lane only
+#   make lint-docstrings — docstring-coverage lint (warn lane + strict set)
 
 PY      ?= python
 PYTEST  ?= $(PY) -m pytest
@@ -19,7 +21,7 @@ ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 PORT    ?= 8423
 
 .PHONY: test test-fast test-engine test-serve bench bench-gate \
-	discover-pallas serve
+	discover-pallas serve lint-docstrings
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -34,6 +36,7 @@ test-engine:
 
 test-serve:
 	$(ENV) $(PYTEST) -q tests/test_http_serve.py \
+		tests/test_remote_discovery.py tests/test_jobs.py \
 		tests/test_topology_service.py tests/test_store.py
 
 bench:
@@ -42,7 +45,7 @@ bench:
 bench-gate:
 	$(PY) benchmarks/check_regression.py --self-test
 	$(ENV) $(PY) benchmarks/run.py --json \
-		--only engine_speedup,adaptive_speedup,topology_query,pallas_interp,topology_http \
+		--only engine_speedup,adaptive_speedup,topology_query,pallas_interp,topology_http,remote_discovery \
 		--out bench_current.json
 	$(PY) benchmarks/check_regression.py bench_current.json BENCH_BASELINE.json
 
@@ -51,4 +54,10 @@ discover-pallas:
 
 serve:
 	$(ENV) $(PY) examples/serve_topologies.py --populate --port $(PORT) \
-		$(if $(STORE),--store $(STORE),)
+		$(if $(STORE),--store $(STORE),) \
+		$(if $(AUTH_TOKEN),--auth-token $(AUTH_TOKEN),) \
+		$(if $(WORKERS),--workers $(WORKERS),)
+
+lint-docstrings:
+	$(PY) benchmarks/check_docstrings.py --self-test
+	$(PY) benchmarks/check_docstrings.py

@@ -63,6 +63,14 @@ GATES: dict[str, dict] = {
         "fractions": ("found",),
         "warn_metrics": ("batched_qps",),
     },
+    # ISSUE 7 tentpole row: the remote discovery write path.  Completion,
+    # retry survival, idempotent store hit, and direct-vs-remote topology
+    # equality are all correctness (hard-gated); the submit->done wall
+    # time warns only — it measures loopback HTTP on the CI box.
+    "remote_discovery": {
+        "bools": ("retried_ok", "idem_ok", "correct", "ok"),
+        "fractions": ("completed",),
+    },
     # Pallas-interpret backend: correctness hard-gated (discovered discrete
     # attributes vs configured ground truth; store hit serving the identical
     # document), wall time warn-only — interpret-mode kernel timings
@@ -236,6 +244,9 @@ def self_test() -> int:
         {"name": "topology_http", "us": 4000000.0,
          "derived": "batched_qps=60000_p50=6000us_p99=15000us_"
                      "found=4000/4000_errors=0_ok=True"},
+        {"name": "remote_discovery", "us": 800000.0,
+         "derived": "completed=3/3_retried_ok=True_idem_ok=True_"
+                     "correct=True_ok=True"},
     ]
     clean = [
         {"name": "engine_speedup", "us": 170000.0,
@@ -252,6 +263,9 @@ def self_test() -> int:
         {"name": "topology_http", "us": 4200000.0,    # slower qps: warn only
          "derived": "batched_qps=41000_p50=8000us_p99=22000us_"
                      "found=4000/4000_errors=0_ok=True"},
+        {"name": "remote_discovery", "us": 1100000.0,  # slower wall: warn only
+         "derived": "completed=3/3_retried_ok=True_idem_ok=True_"
+                     "correct=True_ok=True"},
     ]
     speed_regressed = json.loads(json.dumps(clean))
     speed_regressed[0]["derived"] = \
@@ -280,6 +294,13 @@ def self_test() -> int:
     http_lost = json.loads(json.dumps(clean))
     http_lost[4]["derived"] = http_lost[4]["derived"] \
         .replace("found=4000/4000", "found=3950/4000")
+    remote_broken = json.loads(json.dumps(clean))
+    remote_broken[5]["derived"] = remote_broken[5]["derived"] \
+        .replace("idem_ok=True", "idem_ok=False") \
+        .replace("ok=True", "ok=False")
+    remote_incomplete = json.loads(json.dumps(clean))
+    remote_incomplete[5]["derived"] = remote_incomplete[5]["derived"] \
+        .replace("completed=3/3", "completed=2/3")
 
     checks = [
         ("clean run passes", compare(clean, baseline).ok, True),
@@ -301,6 +322,10 @@ def self_test() -> int:
          compare(http_broken, baseline).ok, False),
         ("http found-fraction drop fails",
          compare(http_lost, baseline).ok, False),
+        ("remote-discovery idempotency break fails",
+         compare(remote_broken, baseline).ok, False),
+        ("remote-discovery incomplete jobs fail",
+         compare(remote_incomplete, baseline).ok, False),
     ]
     bad = [label for label, got, want in checks if got != want]
     for label, got, want in checks:

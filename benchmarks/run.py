@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows (assignment deliverable (d)).
   topology_query     — cold discovery vs warm store hit vs batched queries
   topology_http      — live HTTP front end: concurrent batched qps +
                        p50/p99 request latency (correctness hard-gated)
+  remote_discovery   — remote write path: sim jobs submitted over HTTP,
+                       retry survival + idempotent store hit hard-gated
   adaptive_speedup   — probe rows: adaptive sweep planner vs dense sweeps
                        (discrete attributes must be identical)
   pallas_interp      — third-backend discovery through the real Pallas
@@ -418,6 +420,86 @@ def bench_topology_http() -> None:
             f"found={total_found}/{total}_errors={total_errors}_ok={ok}")
 
 
+def bench_remote_discovery() -> None:
+    """ISSUE 7 tentpole row: the remote discovery write path end to end.
+
+    Submits three sim-backed discovery jobs over a live authenticated
+    server (one with an injected transient runner fault that must be
+    retried to success), then resubmits one request to prove idempotency
+    (store hit, zero runner probes) and compares the remotely-discovered
+    topology against a direct ``discover_sim`` of the same request.
+    Correctness fields are hard-gated (``completed``, ``retried_ok``,
+    ``idem_ok``, ``correct``, ``ok``); the submit->done wall time is
+    warn-only — it measures loopback HTTP + the CI box, not the design.
+    """
+    import tempfile
+
+    from repro.core import discover_sim
+    from repro.core.engine.store import TopologyStore
+    from repro.core.simulate import SIM_DEVICES
+    from repro.serve import TopologyClient, TopologyHTTPServer
+    from repro.serve.jobs import JobEngine, TransientRunnerError
+
+    requests = [{"backend": "sim", "device": d, "seed": 7, "n_samples": 9}
+                for d in ("h100", "mi210", "v5e")]
+    faulted = {"left": 1}
+
+    def inject(job, attempt):
+        # exactly one transient fault, on the first attempt the pool makes
+        if faulted["left"] > 0 and attempt == 0:
+            faulted["left"] -= 1
+            raise TransientRunnerError("injected bench fault")
+
+    with tempfile.TemporaryDirectory() as td:
+        store = TopologyStore(os.path.join(td, "store"))
+        engine = JobEngine(store, workers=2, backoff_base_s=0.01,
+                           on_attempt=inject)
+        with TopologyHTTPServer(store, auth_token="bench-token",
+                                job_engine=engine, job_poll_s=0) as server:
+            client = TopologyClient(server.url, auth_token="bench-token",
+                                    max_retries=2)
+            t0 = time.perf_counter()
+            jobs = [client.submit_discovery(r) for r in requests]
+            finals = [client.wait(j["job_id"], timeout_s=120, poll_s=0.05)
+                      for j in jobs]
+            wall_s = time.perf_counter() - t0
+
+            completed = sum(f["state"] == "done" for f in finals)
+            # one job ate the injected fault and recovered on attempt 2
+            retried_ok = (faulted["left"] == 0
+                          and sorted(f["attempts"] for f in finals)
+                          == [1, 1, 2]
+                          and all(f["result"]["store_hit"] is False
+                                  for f in finals))
+            # idempotency: resubmitting a completed request is a pure
+            # store hit — zero runner probes
+            again = client.wait(
+                client.submit_discovery(requests[0])["job_id"],
+                timeout_s=120, poll_s=0.05)
+            idem_ok = (again["state"] == "done"
+                       and again["key"] == finals[0]["key"]
+                       and again["result"]["store_hit"] is True)
+
+        # the remotely-written topology equals a direct discovery of the
+        # same request (modulo free-text notes, which embed wall times)
+        direct_store = TopologyStore(os.path.join(td, "direct"))
+        discover_sim(SIM_DEVICES["sim-h100"](seed=7), n_samples=9,
+                     store=direct_store)
+
+        def doc(s, key):
+            return {k: v for k, v in s.get(key).topology.to_json().items()
+                    if k != "notes"}
+
+        key = finals[0]["key"]
+        correct = (direct_store.keys() == [key]
+                   and doc(direct_store, key) == doc(store, key))
+
+    ok = completed == 3 and retried_ok and idem_ok and correct
+    row("remote_discovery", wall_s * 1e6,
+        f"completed={completed}/3_retried_ok={retried_ok}_"
+        f"idem_ok={idem_ok}_correct={correct}_ok={ok}")
+
+
 # ------------------------------------------------------------- framework
 def bench_roofline() -> None:
     """Roofline terms per (arch x shape) from the dry-run artifacts."""
@@ -487,6 +569,7 @@ ALL_BENCHES = (bench_table1_coverage, bench_table3_validation,
                bench_fig2_reduction, bench_runtime_breakdown,
                bench_engine_speedup, bench_adaptive_speedup,
                bench_topology_query, bench_topology_http,
+               bench_remote_discovery,
                bench_pallas_interp, bench_fig5_stream,
                bench_perfmodel, bench_link_adjacency, bench_roofline,
                bench_kernels, bench_train_step)

@@ -12,6 +12,14 @@ fresh checkout can demo the full loop:
     curl -s "localhost:8423/topologies/<key>/query?path=L1.size"
     curl -s localhost:8423/metrics | python -m json.tool
 
+The server also accepts remote discovery jobs (``POST /discoveries``,
+see docs/HTTP_API.md); ``--workers`` sizes the job pool and
+``--auth-token`` gates the mutating endpoints behind a bearer token:
+
+    curl -s -X POST localhost:8423/discoveries \
+         -H 'Authorization: Bearer secret' \
+         -d '{"backend": "sim", "device": "v5e", "seed": 3}'
+
 Runs until interrupted; Ctrl-C drains in-flight requests before exiting.
 """
 import argparse
@@ -38,6 +46,11 @@ def main() -> None:
                     help="discover the simulated validation devices into "
                          "the store first when it is empty")
     ap.add_argument("--samples", type=int, default=9)
+    ap.add_argument("--auth-token", default=None, metavar="TOKEN",
+                    help="require 'Authorization: Bearer TOKEN' on the "
+                         "mutating endpoints (reads stay open)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="discovery job worker pool size (default 2)")
     args = ap.parse_args()
 
     root = args.store or tempfile.mkdtemp(prefix="mt4g-store-")
@@ -55,10 +68,13 @@ def main() -> None:
               file=sys.stderr)
 
     server = TopologyHTTPServer(store, host=args.host, port=args.port,
-                                hot_set=args.hot_set)
+                                hot_set=args.hot_set,
+                                auth_token=args.auth_token,
+                                job_workers=args.workers)
     server.start()
     print(f"# serving {len(store.keys())} topologies on {server.url} "
-          f"(store: {root})", file=sys.stderr)
+          f"(store: {root}, {args.workers} discovery workers, "
+          f"auth {'on' if args.auth_token else 'off'})", file=sys.stderr)
     print(f"#   try: curl -s {server.url}/topologies", file=sys.stderr)
     try:
         while True:

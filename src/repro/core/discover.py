@@ -30,6 +30,11 @@ Engine and legacy results are identical for simulated devices because those
 runners key every sample stream by the request itself
 (``simulate._KeyedSampler``): scheduling, batching, and caching change when
 samples are drawn, never what is drawn.
+
+The same wrappers also back the remote write path: ``serve/jobs.py``
+parses a wire-format request into the identical descriptor (so the job's
+content-addressed key equals the store key the run persists under) and
+invokes these functions server-side from ``POST /discoveries``.
 """
 from __future__ import annotations
 
@@ -58,6 +63,9 @@ KIB = 1024
 
 @dataclass
 class DiscoveryTimings:
+    """Per-family wall times + probe-volume diagnostics for one discovery
+    (paper §V-A reports per-family run times)."""
+
     per_family: dict[str, float] = field(default_factory=dict)
     # Probe-volume diagnostics for the run (cache hits/misses, fusion round
     # count, planner mode).  Not persisted — a store hit reconstructs only
@@ -65,10 +73,12 @@ class DiscoveryTimings:
     meta: dict = field(default_factory=dict)
 
     def add(self, family: str, seconds: float) -> None:
+        """Accumulate seconds onto one benchmark family's total."""
         self.per_family[family] = self.per_family.get(family, 0.0) + seconds
 
     @property
     def total(self) -> float:
+        """Summed per-family wall time for the whole run."""
         return sum(self.per_family.values())
 
     @property
@@ -95,10 +105,10 @@ class _Timer:
 # --------------------------------------------------------------------------
 # Request descriptors (content addresses for the TopologyStore)
 # --------------------------------------------------------------------------
-# Default sweep budget for backends that plan adaptively out of the box
-# (Pallas).  Exposed so request descriptors computed by callers match the
-# ones discovery uses internally.
 def default_sweep_budget():
+    """Default sweep budget for backends that plan adaptively out of the
+    box (Pallas).  Exposed so request descriptors computed by callers
+    (e.g. ``serve/jobs.py``) match the ones discovery uses internally."""
     from .engine.planner import SweepBudget
 
     return SweepBudget()
@@ -138,6 +148,9 @@ def sim_request_descriptor(device, n_samples: int,
 
 def host_request_descriptor(max_bytes: int, n_samples: int,
                             quick: bool) -> dict:
+    """Content address of a ``discover_host`` request: sweep ceiling,
+    sample count, and the quick-mode flag are all that shape the result
+    (the host hierarchy itself has one probeable space)."""
     return {"kind": "discover_host", "max_bytes": int(max_bytes),
             "n_samples": int(n_samples), "quick": bool(quick)}
 

@@ -4,9 +4,12 @@
 keyed sample cache, expands the probe registry into (space × family) work
 items with their dependency edges, runs them on the concurrent scheduler,
 and returns the raw probe results plus per-family timings and cache/order
-diagnostics.  ``discover.discover_sim``/``discover_host`` are thin drivers
-over this function: they assemble the returned results into a ``Topology``
-in exactly the order the legacy sequential loop did.
+diagnostics.  The unified ``discover.discover(request)`` core drives this
+function for every backend (the ``discover_sim``/``discover_host``/
+``discover_pallas`` wrappers only build the request): it assembles the
+returned results into a ``Topology`` in exactly the order the legacy
+sequential loop did, which is why engine and legacy discovery stay
+bit-identical on simulated devices.
 """
 from __future__ import annotations
 

@@ -76,9 +76,16 @@ def pchase_kernel_batch(perms: jax.Array, steps: jax.Array, *,
     ``perms`` (R, N) int32 — row i is a single-cycle permutation over its
     first ``n_i <= N`` slots, zero-padded to the shared width (the chain
     starts at 0 and never leaves its cycle, so padding is never read).
-    ``steps`` (R,) int32 — per-row dependent-chain length, read inside the
-    kernel rather than baked in as a static arg, so every sweep with the
-    same (R, N) shape reuses one compiled kernel.
+
+    **Chain-lengths-as-data contract**: ``steps`` (R,) int32 carries each
+    row's dependent-chain length as kernel *data*, loaded inside the kernel
+    body per grid row — never baked in as a static/compile-time argument.
+    This is what lets one compiled kernel serve every row of a sweep (and
+    every sweep with the same (R, N) shape): rows with different chain
+    lengths differ only in the value read from ``steps``, so no row forces
+    a recompile.  Consequence for callers: changing a row's chain length
+    must never change the kernel's shape signature — resize ``perms``
+    padding, not the grid.
 
     Returns (R, 2) int32 ``[final_cursor, checksum]`` rows, the same
     correctness contract as ``pchase_kernel``.

@@ -1,4 +1,11 @@
-"""Serving engine: batched prefill + decode with continuous batching.
+"""Token-serving engine: batched prefill + decode with continuous batching.
+
+Naming note — this repo has three "engines", and this is the *model* one:
+``core/engine`` is the probe engine behind the unified
+``discover(request)`` core, ``serve/jobs.JobEngine`` is the remote
+discovery job engine behind ``POST /discoveries``, and this module serves
+LLM tokens for the latency benchmarks.  It shares nothing with the other
+two beyond the name.
 
 The engine owns a fixed pool of B sequence slots. ``generate`` services a
 request list: prompts are prefilled into free slots, every ``step`` decodes
@@ -24,6 +31,8 @@ __all__ = ["ServeConfig", "Engine"]
 
 @dataclass(frozen=True)
 class ServeConfig:
+    """Serving knobs: slot-pool size, sequence cap, sampling temperature."""
+
     max_len: int = 256
     slots: int = 4
     temperature: float = 0.0        # 0 -> greedy
@@ -31,6 +40,10 @@ class ServeConfig:
 
 
 class Engine:
+    """Continuous-batching token server over a fixed slot pool; the
+    ``generate`` loop prefills into free slots and decodes all active
+    slots per step with one jitted call."""
+
     def __init__(self, model, params, cfg: ServeConfig):
         self.model = model
         self.params = params

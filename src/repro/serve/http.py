@@ -6,17 +6,27 @@ paper's §V consumption pattern (performance modeling, bottleneck analysis,
 partitioning) can run in a different process, language, or machine from the
 discovery runs that produced the store.
 
-Endpoints (all JSON)::
+Endpoints (all JSON; the full reference with request/response shapes lives
+in ``docs/HTTP_API.md``)::
 
-    GET  /healthz                                  liveness + entry count
-    GET  /metrics                                  lru + per-endpoint stats
-    GET  /topologies                               [{key, meta}, ...]
-    GET  /topologies/<key>                         full topology document
-    GET  /topologies/<key>/query?path=L1.size      one dotted-path lookup
-    GET  /topologies/<key>/attributes              provenance/min_confidence
-    GET  /adjacency/<key>                          sharing/link adjacency
-    GET  /diff?a=<key>&b=<key>&rel_tol=0.05        attribute-level diff
-    POST /query_batch   {"requests": [[key, path], ...]}
+    GET    /healthz                                liveness + entry count
+    GET    /metrics                                lru + endpoint + job stats
+    GET    /topologies                             [{key, meta}, ...]
+    GET    /topologies/<key>                       full topology document
+    GET    /topologies/<key>/query?path=L1.size    one dotted-path lookup
+    GET    /topologies/<key>/attributes            provenance/min_confidence
+    GET    /adjacency/<key>                        sharing/link adjacency
+    GET    /diff?a=<key>&b=<key>&rel_tol=0.05      attribute-level diff
+    POST   /query_batch   {"requests": [[key, path], ...]}
+    POST   /discoveries   serialized discovery request -> 202 + job
+    GET    /discoveries                            all known jobs
+    GET    /discoveries/<job_id>                   job status (poll target)
+    DELETE /discoveries/<job_id>                   cancel a job
+
+The ``/discoveries`` endpoints are the remote **write** path: submissions
+are validated, content-address-deduplicated, and executed server-side by
+the ``serve.jobs.JobEngine`` worker pool, write-through to the same store
+every read endpoint serves (see the module docstring of ``serve/jobs.py``).
 
 Traffic hardening:
 
@@ -25,11 +35,19 @@ Traffic hardening:
 * each connection carries a socket **timeout** (a stuck client cannot pin a
   handler thread forever);
 * errors map to structured JSON statuses — missing/invalid parameters
-  **400**, unknown endpoint or topology key **404**, wrong method **405**,
-  malformed JSON **400**, quarantined-on-disk entry **503** with a
-  ``Retry-After`` hint (re-discovery repopulates the key);
+  **400**, unknown endpoint, topology key, or job id **404**, wrong method
+  **405**, malformed JSON **400**, quarantined-on-disk entry **503** with a
+  ``Retry-After`` hint (re-discovery repopulates the key), full job queue
+  **503** with ``Retry-After``;
+* **bearer-token auth on mutating endpoints** when the server is started
+  with ``auth_token=...``: ``POST /discoveries`` and ``DELETE
+  /discoveries/<job_id>`` require ``Authorization: Bearer <token>`` and
+  answer **401** (with ``WWW-Authenticate``) on a missing or wrong token;
+  read endpoints stay open — discovered topologies are the product, the
+  write path is the privilege;
 * ``stop()`` shuts down gracefully: the accept loop stops first, then
-  in-flight handler threads are joined (drained), never killed mid-write.
+  in-flight handler threads are joined (drained), never killed mid-write;
+  the job engine stops with it (queued jobs cancel, running jobs finish).
 
 Per-item misses inside ``/query_batch`` and unresolvable attribute paths on
 a *known* topology are data (``found: false``), not transport errors — the
@@ -37,6 +55,7 @@ batch contract mirrors ``TopologyService.query_batch``.
 """
 from __future__ import annotations
 
+import hmac
 import json
 import threading
 import time
@@ -44,6 +63,7 @@ from dataclasses import asdict
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
+from .jobs import JobEngine, QueueFullError
 from .topology_service import TopologyService
 
 __all__ = ["HttpError", "ServerMetrics", "TopologyHTTPServer",
@@ -52,6 +72,7 @@ __all__ = ["HttpError", "ServerMetrics", "TopologyHTTPServer",
 MAX_BODY_BYTES = 1 << 20          # 1 MiB: a query_batch of ~10k pairs
 REQUEST_TIMEOUT_S = 30.0
 RETRY_AFTER_S = 5
+JOB_POLL_S = 1                    # Retry-After hint on unfinished job polls
 
 # Log-spaced latency histogram edges (us); the last bucket is +inf.
 LATENCY_BUCKETS_US = (100, 250, 500, 1000, 2500, 5000, 10000, 25000,
@@ -62,11 +83,13 @@ class HttpError(Exception):
     """A structured HTTP error response."""
 
     def __init__(self, status: int, message: str, *,
-                 retry_after_s: int | None = None):
+                 retry_after_s: int | None = None,
+                 headers: dict | None = None):
         super().__init__(message)
         self.status = status
         self.message = message
         self.retry_after_s = retry_after_s
+        self.headers = headers or {}
 
 
 class ServerMetrics:
@@ -79,6 +102,7 @@ class ServerMetrics:
         self.started_at = time.time()
 
     def record(self, endpoint: str, status: int, elapsed_s: float) -> None:
+        """Fold one served request into the counters and histograms."""
         us = elapsed_s * 1e6
         with self._mutex:
             ep = self._endpoints.setdefault(endpoint, {
@@ -98,6 +122,7 @@ class ServerMetrics:
             self._statuses[bucket] = self._statuses.get(bucket, 0) + 1
 
     def snapshot(self) -> dict:
+        """Deep-copied metrics state, served by ``GET /metrics``."""
         with self._mutex:
             return {
                 "uptime_s": round(time.time() - self.started_at, 3),
@@ -126,13 +151,16 @@ class _Handler(BaseHTTPRequestHandler):
         return self.server.service
 
     def _send_json(self, status: int, payload: dict,
-                   retry_after_s: int | None = None) -> None:
+                   retry_after_s: int | None = None,
+                   headers: dict | None = None) -> None:
         body = json.dumps(payload).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
         if retry_after_s is not None:
             self.send_header("Retry-After", str(retry_after_s))
+        for name, value in (headers or {}).items():
+            self.send_header(name, str(value))
         self.end_headers()
         self.wfile.write(body)
 
@@ -143,6 +171,9 @@ class _Handler(BaseHTTPRequestHandler):
     def do_POST(self):                                         # noqa: N802
         self._dispatch("POST")
 
+    def do_DELETE(self):                                       # noqa: N802
+        self._dispatch("DELETE")
+
     def _dispatch(self, method: str) -> None:
         t0 = time.perf_counter()
         url = urlparse(self.path)
@@ -152,14 +183,21 @@ class _Handler(BaseHTTPRequestHandler):
             if hook is not None:
                 hook(method, url.path)
             endpoint, handler, kwargs = self._route(method, url.path)
-            payload = handler(query=parse_qs(url.query), **kwargs)
+            out = handler(query=parse_qs(url.query), **kwargs)
+            # Handlers return a payload dict, or (payload, status, headers)
+            # when they need a non-200 success code / extra headers (the
+            # job endpoints: 202 Accepted, Retry-After poll hints).
+            payload, extra = out, {}
             status = 200
-            self._send_json(200, payload)
+            if isinstance(out, tuple):
+                payload, status, extra = out
+            self._send_json(status, payload, headers=extra)
         except HttpError as e:
             status = e.status
             self._send_json(e.status, {"error": e.message,
                                        "status": e.status},
-                            retry_after_s=e.retry_after_s)
+                            retry_after_s=e.retry_after_s,
+                            headers=e.headers)
         except (BrokenPipeError, ConnectionResetError):
             status = 499                    # client went away mid-response
         except Exception as e:              # noqa: BLE001 — 500, keep serving
@@ -184,10 +222,22 @@ class _Handler(BaseHTTPRequestHandler):
             ("GET", ("diff",)): ("/diff", self._diff, {}),
             ("POST", ("query_batch",)): ("/query_batch", self._query_batch,
                                          {}),
+            ("GET", ("discoveries",)): ("/discoveries", self._discoveries,
+                                        {}),
+            ("POST", ("discoveries",)): ("/discoveries",
+                                         self._submit_discovery, {}),
         }
         hit = routes.get((method, tuple(parts)))
         if hit is not None:
             return hit
+        if len(parts) == 2 and parts[0] == "discoveries":
+            if method == "GET":
+                return ("/discoveries/{job_id}", self._discovery,
+                        {"job_id": parts[1]})
+            if method == "DELETE":
+                return ("/discoveries/{job_id}", self._cancel_discovery,
+                        {"job_id": parts[1]})
+            raise HttpError(405, f"{method} not allowed here")
         if len(parts) == 2 and parts[0] == "topologies":
             if method != "GET":
                 raise HttpError(405, f"{method} not allowed here")
@@ -242,13 +292,47 @@ class _Handler(BaseHTTPRequestHandler):
         except (json.JSONDecodeError, UnicodeDecodeError):
             raise HttpError(400, "malformed JSON request body") from None
 
+    def _authorize(self) -> None:
+        """Bearer-token gate for mutating endpoints (no-op when the server
+        runs without a token).  Constant-time compare; 401 carries a
+        ``WWW-Authenticate`` challenge per RFC 6750."""
+        token = self.server.auth_token
+        if token is None:
+            return
+        supplied = self.headers.get("Authorization", "")
+        if not supplied.startswith("Bearer ") or not hmac.compare_digest(
+                supplied[len("Bearer "):], token):
+            raise HttpError(
+                401, "missing or invalid bearer token (mutating endpoints "
+                     "require 'Authorization: Bearer <token>')",
+                headers={"WWW-Authenticate": 'Bearer realm="mt4g-topod"'})
+
+    def _jobs_or_404(self) -> "JobEngine":
+        engine = self.server.job_engine
+        if engine is None:
+            raise HttpError(404, "remote discovery is disabled on this "
+                                 "server (started with jobs=False)")
+        return engine
+
+    def _job_or_404(self, engine, job_id: str):
+        job = engine.get(job_id)
+        if job is None:
+            raise HttpError(404, f"unknown job id: {job_id}")
+        return job
+
     # ------------------------------------------------------ endpoints
     def _healthz(self, query) -> dict:
+        engine = self.server.job_engine
         return {"status": "ok", "entries": len(self.svc.keys()),
-                "draining": self.server.draining}
+                "draining": self.server.draining,
+                "jobs_enabled": engine is not None,
+                "job_queue_depth": (engine.queue_depth()
+                                    if engine is not None else None)}
 
     def _metrics(self, query) -> dict:
+        engine = self.server.job_engine
         return {"service": self.svc.stats(),
+                "jobs": engine.stats() if engine is not None else None,
                 **self.server.metrics.snapshot()}
 
     def _topologies(self, query) -> dict:
@@ -299,6 +383,58 @@ class _Handler(BaseHTTPRequestHandler):
         self._topology_or_error(key)
         return {"key": key, "adjacency": self.svc.adjacency(key)}
 
+    # --------------------------------------------- remote discovery (jobs)
+    def _submit_discovery(self, query):
+        """POST /discoveries — validate, authorize, enqueue (or attach).
+
+        202 on a newly created job, 200 when the submission deduplicated
+        onto an in-flight equivalent (same content-addressed key); 400 on
+        malformed params, 401 unauthorized, 503 + ``Retry-After`` on a
+        full queue.
+        """
+        self._authorize()
+        engine = self._jobs_or_404()
+        body = self._read_body_json()
+        try:
+            job, created = engine.submit(body)
+        except ValueError as e:
+            raise HttpError(400, f"bad discovery request: {e}") from None
+        except QueueFullError as e:
+            raise HttpError(503, str(e),
+                            retry_after_s=self.server.retry_after_s) \
+                from None
+        payload = {**job.to_json(), "deduplicated": not created,
+                   "status_url": f"/discoveries/{job.job_id}"}
+        return (payload, 202 if created else 200, {})
+
+    def _discoveries(self, query) -> dict:
+        engine = self._jobs_or_404()
+        states = query.get("state", [])
+        jobs = engine.jobs()
+        if states:
+            jobs = [j for j in jobs if j.state in states]
+        return {"jobs": [j.to_json() for j in jobs]}
+
+    def _discovery(self, query, job_id: str):
+        """GET /discoveries/<job_id> — poll target.  Unfinished jobs carry
+        a ``Retry-After`` header so clients can pace their polling."""
+        engine = self._jobs_or_404()
+        job = self._job_or_404(engine, job_id)
+        payload = job.to_json()
+        if job.terminal:
+            return payload
+        return (payload, 200, {"Retry-After": self.server.job_poll_s})
+
+    def _cancel_discovery(self, query, job_id: str):
+        """DELETE /discoveries/<job_id> — idempotent cancellation: queued
+        jobs cancel immediately, running ones best-effort (between retry
+        attempts), terminal ones are left as they finished."""
+        self._authorize()
+        engine = self._jobs_or_404()
+        self._job_or_404(engine, job_id)
+        job = engine.cancel(job_id)
+        return job.to_json()
+
     def _diff(self, query) -> dict:
         a = query.get("a", [None])[0]
         b = query.get("b", [None])[0]
@@ -340,18 +476,38 @@ class TopologyHTTPServer:
 
     Also a context manager.  ``on_request`` is an optional
     ``(method, path) -> None`` observer hook called before routing —
-    used by tests to model slow handlers.
+    used by tests to model slow handlers (an ``HttpError`` it raises is
+    served as that structured error, which is how tests and the bench
+    inject 503-with-``Retry-After`` faults).
+
+    Remote discovery (the write path) is on by default: a ``JobEngine``
+    over the service's store starts/stops with the server.  Pass
+    ``jobs=False`` to serve read-only, ``job_engine=`` to share a
+    pre-configured engine (fault hooks, custom retry policy), and
+    ``auth_token=`` to require ``Authorization: Bearer <token>`` on the
+    mutating endpoints.
     """
 
     def __init__(self, service_or_store, host: str = "127.0.0.1",
                  port: int = 0, *, max_body_bytes: int = MAX_BODY_BYTES,
                  request_timeout_s: float = REQUEST_TIMEOUT_S,
                  retry_after_s: int = RETRY_AFTER_S,
-                 hot_set: int = 8, on_request=None):
+                 hot_set: int = 8, on_request=None,
+                 auth_token: str | None = None, jobs: bool = True,
+                 job_engine: JobEngine | None = None, job_workers: int = 2,
+                 job_queue: int = 32, job_poll_s: int = JOB_POLL_S):
         if isinstance(service_or_store, TopologyService):
             self.service = service_or_store
         else:
             self.service = TopologyService(service_or_store, hot_set=hot_set)
+        if job_engine is not None:
+            self.job_engine = job_engine
+        elif jobs:
+            self.job_engine = JobEngine(self.service.store,
+                                        workers=job_workers,
+                                        max_queue=job_queue)
+        else:
+            self.job_engine = None
         self.metrics = ServerMetrics()
         self._httpd = _Server((host, port), _Handler)
         self._httpd.service = self.service
@@ -359,6 +515,9 @@ class TopologyHTTPServer:
         self._httpd.max_body_bytes = int(max_body_bytes)
         self._httpd.request_timeout_s = float(request_timeout_s)
         self._httpd.retry_after_s = int(retry_after_s)
+        self._httpd.job_poll_s = int(job_poll_s)
+        self._httpd.auth_token = auth_token
+        self._httpd.job_engine = self.job_engine
         self._httpd.on_request = on_request
         self._httpd.draining = False
         self._thread: threading.Thread | None = None
@@ -366,16 +525,22 @@ class TopologyHTTPServer:
     # --------------------------------------------------------- lifecycle
     @property
     def address(self) -> tuple[str, int]:
+        """``(host, port)`` actually bound (resolves port 0)."""
         return self._httpd.server_address[:2]
 
     @property
     def url(self) -> str:
+        """Base URL, e.g. ``http://127.0.0.1:8423``."""
         host, port = self.address
         return f"http://{host}:{port}"
 
     def start(self) -> "TopologyHTTPServer":
+        """Start the job engine (if any) and the serving thread; returns
+        ``self`` so ``TopologyHTTPServer(store).start()`` chains."""
         if self._thread is not None:
             raise RuntimeError("server already started")
+        if self.job_engine is not None:
+            self.job_engine.start()
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, kwargs={"poll_interval": 0.05},
             name="mt4g-topod", daemon=True)
@@ -384,9 +549,13 @@ class TopologyHTTPServer:
 
     def stop(self, drain: bool = True) -> None:
         """Stop accepting, then drain: in-flight requests run to completion
-        before this returns (``drain=False`` abandons handler threads)."""
+        before this returns (``drain=False`` abandons handler threads).
+        The job engine stops first — queued jobs are cancelled, the
+        running job of each worker finishes."""
         if self._thread is None:
             return
+        if self.job_engine is not None:
+            self.job_engine.stop()
         self._httpd.draining = True
         self._httpd.shutdown()              # stops the accept loop
         self._httpd.block_on_close = drain

@@ -1,0 +1,69 @@
+"""Tests for the docstring-coverage linter (``benchmarks/check_docstrings.py``).
+
+The linter is CI infrastructure: the warn lane must never fail the build,
+the strict set must hard-fail on any public object with no docstring, and
+the AST walk must exempt private and nested scope.  Plus the end-to-end
+check CI relies on: the real tree currently passes.
+"""
+import ast
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+
+from check_docstrings import (STRICT_FILES, WARN_LANE,  # noqa: E402
+                              check_file, public_objects, self_test)
+
+
+class TestPublicObjects:
+    def test_module_and_public_defs_counted(self):
+        objs = public_objects(ast.parse(
+            '"""doc"""\ndef f():\n    pass\nclass C:\n'
+            '    def m(self):\n        pass\n'))
+        assert [(n, ok) for n, _, ok in objs] == [
+            ("<module>", True), ("f", False), ("C", False),
+            ("C.m", False)]
+
+    def test_private_and_nested_defs_exempt(self):
+        objs = public_objects(ast.parse(
+            "def _hidden():\n    pass\n"
+            "def outer():\n    '''doc'''\n"
+            "    def inner():\n        pass\n"
+            "class C:\n    '''doc'''\n"
+            "    def _p(self):\n        pass\n"))
+        names = {n for n, _, _ in objs}
+        assert names == {"<module>", "outer", "C"}
+
+    def test_async_defs_counted(self):
+        objs = public_objects(ast.parse(
+            '"""doc"""\nasync def fetch():\n    pass\n'))
+        assert ("fetch", 2, False) in objs
+
+
+class TestTreeContract:
+    def test_strict_files_exist_and_are_fully_documented(self):
+        """The hard CI guarantee: every strict file has zero undocumented
+        public objects right now."""
+        for rel in STRICT_FILES:
+            path = os.path.join(REPO, rel)
+            assert os.path.exists(path), rel
+            _, _, missing = check_file(path)
+            assert missing == [], f"{rel}: {missing}"
+
+    def test_warn_lanes_exist(self):
+        for lane in WARN_LANE:
+            assert os.path.isdir(os.path.join(REPO, lane)), lane
+
+    def test_self_test_passes(self, capsys):
+        assert self_test() == 0
+        assert "self-test passed" in capsys.readouterr().out
+
+    def test_cli_exit_zero_on_current_tree(self):
+        proc = subprocess.run(
+            [sys.executable,
+             os.path.join(REPO, "benchmarks", "check_docstrings.py")],
+            capture_output=True, text=True)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "docstring lint: OK" in proc.stdout
