@@ -44,6 +44,8 @@ STRICT_FILES = (
     "src/repro/serve/jobs.py",
     "src/repro/core/discover.py",
     "src/repro/core/engine/engine.py",
+    "src/repro/core/engine/planner.py",
+    "src/repro/core/engine/fusion.py",
     "src/repro/kernels/pchase_probe.py",
 )
 

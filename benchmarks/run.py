@@ -241,21 +241,26 @@ def bench_pallas_interp() -> None:
                 and abs(vmem.get("size") - gt["VMEM"]["size"]) <= 64
 
             calls = runner.kernel_calls
+            # §IV-F/G/H rows coalesced onto shared eviction grids: more
+            # rows than dispatches means the fusion actually batched them.
+            fused = (runner.eviction_grid_calls > 0
+                     and runner.eviction_grid_rows
+                     > runner.eviction_grid_calls)
             t0 = time.perf_counter()
             topo_hit, _ = discover_pallas(runner=runner, n_samples=9,
                                           store=store)
             hit_s = max(time.perf_counter() - t0, 1e-9)
             served = (topo_hit.to_json() == topo.to_json()
                       and runner.kernel_calls == calls)
-            return bool(ok), bool(served), cold_s, hit_s, calls
+            return bool(ok), bool(served), bool(fused), cold_s, hit_s, calls
 
-    ok, served, cold_s, hit_s, calls = attempt()
+    ok, served, fused, cold_s, hit_s, calls = attempt()
     retried = False
     if not (ok and served):
         retried = True
-        ok, served, cold_s, hit_s, calls = attempt()
+        ok, served, fused, cold_s, hit_s, calls = attempt()
     row("pallas_interp", cold_s * 1e6,
-        f"discrete_ok={ok}_store_hit={served}_"
+        f"discrete_ok={ok}_store_hit={served}_eviction_fusion={fused}_"
         f"warm_speedup={cold_s/hit_s:.1f}x_kernel_calls={calls}_"
         f"retried={retried}")
 

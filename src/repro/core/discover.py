@@ -42,6 +42,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable
 
+import numpy as np
+
 from .catalog import HardwareSpec
 from .probes.amount import align_segments, find_amount, find_cu_sharing, find_sharing
 from .probes.bandwidth import measure_bandwidth
@@ -122,7 +124,8 @@ def _budget_descriptor(budget) -> dict | None:
 
 
 def sim_request_descriptor(device, n_samples: int,
-                           elements: list[str] | None, budget=None) -> dict:
+                           elements: list[str] | None, budget=None,
+                           survey: bool = False) -> dict:
     """Everything that determines a ``discover_sim`` result — and nothing
     that does not.  Worker count, engine-vs-legacy, batching, and fusion
     are excluded: request-keyed sample streams make them result-invisible
@@ -143,6 +146,11 @@ def sim_request_descriptor(device, n_samples: int,
     }
     if budget is not None:
         d["budget"] = _budget_descriptor(budget)
+    if survey:
+        # Survey results are spot-check-verified copies, not full measures —
+        # they must never collide with a full run's key.  Only present when
+        # on, so pre-survey stores keep their keys.
+        d["survey"] = True
     return d
 
 
@@ -157,7 +165,8 @@ def host_request_descriptor(max_bytes: int, n_samples: int,
 
 def pallas_request_descriptor(model, n_samples: int,
                               elements: list[str] | None,
-                              budget=_DEFAULT_BUDGET) -> dict:
+                              budget=_DEFAULT_BUDGET,
+                              survey: bool = False) -> dict:
     """Content address of a ``discover_pallas`` request.
 
     Keyed like the sim descriptor — model identity + seed + sample count +
@@ -169,7 +178,7 @@ def pallas_request_descriptor(model, n_samples: int,
     """
     if budget is _DEFAULT_BUDGET:
         budget = default_sweep_budget()
-    return {
+    d = {
         "kind": "discover_pallas",
         "backend": f"pallas-interp:{model.name}",
         "model": model.name,
@@ -179,6 +188,9 @@ def pallas_request_descriptor(model, n_samples: int,
         "elements": sorted(elements) if elements else None,
         "budget": _budget_descriptor(budget),
     }
+    if survey:
+        d["survey"] = True      # keyed apart from full runs (see sim twin)
+    return d
 
 
 # --------------------------------------------------------------------------
@@ -208,6 +220,206 @@ def _store_persist(store, key: str, descriptor: dict, topo: Topology,
                                    "timings": dict(timings.per_family)})
         if cache is not None and len(cache):
             store.put_samples(key, cache.snapshot())
+
+
+# --------------------------------------------------------------------------
+# Fleet survey mode: verify a sibling topology with a spot-check subset
+# --------------------------------------------------------------------------
+def _survey_spot_check(runner, topo, request) -> bool:
+    """Planned spot-check: does this device match a sibling's topology?
+
+    Probes a few decisive rows per discrete attribute instead of running
+    the full sweeps — boundary straddles for sizes (margins from
+    ``budget.target_resolution``), the classification flip for fetch
+    granularity, two §IV-E score rows for core-scope line sizes, and one
+    eviction row per §IV-F/§IV-G/§IV-H family.  Latency/bandwidth floats
+    are NOT verified (they are measurements, not discrete attributes — a
+    surveyed entry reports the sibling's).  Returns False on ANY
+    disagreement; the caller then runs the full discovery, so a spot-check
+    can only trade a failed shortcut for a full measure, never accuracy.
+    """
+    from .probes.amount import _hit_miss_refs, _is_miss, amount_ladder
+    from .probes.linesize import granularity_refs, hit_scores
+    from .probes.size import ShiftClassifier, classification_jump
+
+    n_samples = request.n_samples
+    tr = int(getattr(request.budget, "target_resolution", None) or 0)
+    infos = {i.name: i for i in runner.spaces()}
+    api_size = getattr(runner, "api_size", lambda _s: None)
+
+    for me in topo.memory:
+        info = infos.get(me.name)
+        if info is None:
+            if me.name in ("DeviceMemory", "DRAM"):
+                continue            # float-only elements: nothing discrete
+            return False            # sibling claims a space we cannot see
+        size = me.get("size")
+        if size:
+            if info.scope == "chip":
+                # chip totals are API-reported: a free exact comparison
+                if api_size(me.name) != size:
+                    return False
+            else:
+                # two rows straddling the capacity boundary must classify
+                # unshifted below / shifted above, vs the dense base row
+                step = 4 if info.kind == "scratchpad" else 32
+                margin = max(tr, int(size) // 16, 8 * step)
+                base = runner.pchase(me.name, 1 * KIB, step, n_samples)
+                clf = ShiftClassifier(base, 0.01, classification_jump(runner))
+                if clf.shifted(runner.pchase(me.name, int(size) - margin,
+                                             step, n_samples)):
+                    return False
+                if not clf.shifted(runner.pchase(me.name, int(size) + margin,
+                                                 step, n_samples)):
+                    return False
+
+        g = me.get("fetch_granularity")
+        if g and info.supports_cold:
+            # the stored granularity must be the §IV-D classification flip:
+            # all-miss at g, still mixing hits one grid notch below
+            _h, _m, thresh, hit_med, miss_med = granularity_refs(
+                runner, me.name, 64 * KIB, 512, n_samples, 4)
+            if miss_med < hit_med * 1.5:
+                return False
+            n_loads = 16 * n_samples
+            min_frac = max(0.005, 2.0 / n_loads)
+
+            def mixed(s: int) -> bool:
+                arr = max(64 * KIB, s * (n_loads + 1))
+                row = np.asarray(runner.cold_chase(me.name, arr, s, n_loads))
+                return float(np.mean(row < thresh)) > min_frac
+
+            if mixed(int(g)):
+                return False
+            if int(g) > 4 and not mixed(int(g) - 4):
+                return False
+
+        line = me.get("line_size")
+        if line and size and g and info.supports_cold \
+                and info.scope != "chip":
+            # two §IV-E score rows bracketing the stored line's transition
+            # (chip-scope lines are skipped: their sweeps are keyed on the
+            # measured segment, which a survey does not re-derive)
+            g2 = max(int(g) // 2, 4)
+            arr = int(int(size) * 1.0625)
+            pivot = runner.pchase(me.name, arr, g2, n_samples)
+            href = runner.pchase(me.name, arr, 1024 * 8, n_samples)
+            hi = runner.pchase(me.name, arr, 2 * int(line), n_samples)
+            if float(hit_scores(hi, pivot, href)[0]) <= 0:
+                return False
+            if int(line) >= 8 * g2:
+                lo = runner.pchase(me.name, arr, int(line) // 4, n_samples)
+                if float(hit_scores(lo, pivot, href)[0]) > 0:
+                    return False
+
+        am = me.get("amount")
+        if am and info.supports_amount and size:
+            # one §IV-F eviction row at the stored boundary rung (plus its
+            # evicting predecessor when the ladder has one)
+            cores = runner.cores_per_sm
+            arr = int(int(size) * 0.9)
+            h_ref, m_ref = _hit_miss_refs(runner, me.name, arr, int(size),
+                                          n_samples)
+            ladder = amount_ladder(cores)
+            if not ladder:
+                pass
+            elif int(am) <= 1:
+                # amount 1 = even the largest rung still evicted
+                row = runner.amount_probe(me.name, 0, ladder[-1], arr,
+                                          n_samples)
+                if not _is_miss(row, h_ref, m_ref):
+                    return False
+            else:
+                b_star = max(cores // int(am), 1)
+                row = runner.amount_probe(me.name, 0, b_star, arr, n_samples)
+                if _is_miss(row, h_ref, m_ref):
+                    return False
+                if b_star >= 2:
+                    row = runner.amount_probe(me.name, 0, b_star // 2, arr,
+                                              n_samples)
+                    if not _is_miss(row, h_ref, m_ref):
+                        return False
+
+    # ---- one §IV-G sharing row for the first name-sharing leader pair
+    def _cu_grouped(name: str) -> bool:
+        el = topo.find_memory(name)
+        return el is not None and el.get("exclusive_cus") is not None
+
+    ss = [i.name for i in runner.spaces()
+          if i.supports_sharing and i.scope == "core"
+          and not _cu_grouped(i.name)]
+    if len(ss) >= 2:
+        ea = topo.find_memory(ss[0])
+        if ea is not None and ea.get("size") \
+                and topo.find_memory(ss[1]) is not None:
+            expected = ss[1] in ea.shared_with
+            res = find_sharing(runner, ss[0], ss[1], int(ea.get("size")),
+                               n_samples=n_samples)
+            if res.shared != expected:
+                return False
+
+    # ---- one §IV-H row inside the first CU group + one across groups
+    sl1d = topo.find_memory(request.cu_space)
+    if sl1d is not None and sl1d.get("exclusive_cus") is not None \
+            and sl1d.get("size"):
+        groups = [tuple(int(x) for x in s.split(","))
+                  for s in sl1d.shared_with]
+        cu_ns = max(n_samples // 2, 9)
+        size = int(sl1d.get("size"))
+        arr = int(size * 0.9)
+        h_ref, m_ref = _hit_miss_refs(runner, request.cu_space, arr, size,
+                                      cu_ns)
+        if groups:
+            a, b = groups[0][0], groups[0][1]
+            row = runner.cu_sharing_probe(a, b, arr, cu_ns,
+                                          space=request.cu_space)
+            if not _is_miss(row, h_ref, m_ref):
+                return False
+            other = (groups[1][0] if len(groups) > 1 else
+                     (sl1d.get("exclusive_cus") or [None])[0])
+            if other is not None:
+                row = runner.cu_sharing_probe(a, int(other), arr, cu_ns,
+                                              space=request.cu_space)
+                if _is_miss(row, h_ref, m_ref):
+                    return False
+    return True
+
+
+def _survey_discovery(request: DiscoveryRequest, store, key: str):
+    """Serve a survey request from a verified sibling, or None to go full.
+
+    Picks the newest stored entry with the same vendor/model/backend whose
+    provenance is a real measure (surveys never chain off surveys), spot
+    checks it against this request's runner, and on agreement persists the
+    sibling's topology under THIS request's key with ``survey`` provenance
+    and the reference key in the meta — auditable, and an ordinary store
+    hit for every later lookup of the same request.
+    """
+    ref = None
+    for entry in store.find(model=request.model, vendor=request.vendor,
+                            backend=request.backend):
+        if entry.key != key and entry.meta.get("provenance") != "survey":
+            ref = entry
+            break
+    if ref is None:
+        return None
+    from .engine import SampleCache
+    from .engine.cache import CachingRunner
+
+    timings = DiscoveryTimings()
+    cached = CachingRunner(request.make_runner(), cache=SampleCache())
+    with _Timer(timings, "survey"):
+        ok = _survey_spot_check(cached, ref.topology, request)
+    timings.meta["cache"] = cached.cache.stats()
+    timings.meta["survey"] = {"reference": ref.key, "verified": bool(ok)}
+    if not ok:
+        return None
+    with store.lock():
+        store.put(key, ref.topology,
+                  meta={"request": request.descriptor,
+                        "timings": dict(timings.per_family),
+                        "provenance": "survey", "survey_of": ref.key})
+    return ref.topology, timings
 
 
 # --------------------------------------------------------------------------
@@ -248,6 +460,13 @@ class DiscoveryRequest:
     # ready probe rounds into single batched dispatches.  Kernel execution
     # stays serial, so it composes with timing-sensitive backends.
     fuse: bool = False
+    # Fleet survey mode: instead of a full discovery, verify a stored
+    # sibling topology (same vendor/model/backend, full provenance) with a
+    # planned spot-check subset of probe rows and write it through under
+    # THIS request's key with ``survey`` provenance.  Any mismatch — or no
+    # usable sibling — silently degrades to the full discovery, so a survey
+    # can be slower but never wrong.  Requires a ``store``.
+    survey: bool = False
     plan: Callable[[object], list] | None = None
     assemble: Callable[[object, DiscoveryTimings], Topology] | None = None
 
@@ -280,6 +499,12 @@ def discover(request: DiscoveryRequest, *, store=None, refresh: bool = False,
         else:
             from .engine.store import request_key
             key = request_key(request.descriptor)
+
+    if request.survey and store is not None:
+        surveyed = _survey_discovery(request, store, key)
+        if surveyed is not None:
+            return surveyed
+        # no usable sibling / spot-check mismatch: full discovery below
 
     timings = DiscoveryTimings()
     cache = SampleCache()
@@ -439,7 +664,7 @@ def discover_sim(device, n_samples: int = 33,
                  elements: list[str] | None = None, *,
                  engine: bool = True, max_workers: int | None = None,
                  store=None, refresh: bool = False, budget=None,
-                 fuse: bool = False, gc_policy=None,
+                 fuse: bool = False, gc_policy=None, survey: bool = False,
                  ) -> tuple[Topology, DiscoveryTimings]:
     """Full MT4G-style discovery of a simulated device.
 
@@ -454,8 +679,14 @@ def discover_sim(device, n_samples: int = 33,
     The default stays dense: the sim backend is the validation oracle.
     ``fuse=True`` coalesces concurrently ready probe rounds into single
     batched dispatches (a wall-clock win on dispatch-bound runners).
+
+    ``survey=True`` (fleet survey mode, needs a ``store``) verifies a
+    stored sibling topology with a planned spot-check subset instead of a
+    full discovery, writing it through under this request's key with
+    ``survey`` provenance; see ``DiscoveryRequest.survey``.
     """
-    descriptor = sim_request_descriptor(device, n_samples, elements, budget)
+    descriptor = sim_request_descriptor(device, n_samples, elements, budget,
+                                        survey=survey)
 
     if not engine:
         key = None
@@ -486,7 +717,7 @@ def discover_sim(device, n_samples: int = 33,
         device_families=tuple(device_families),
         max_workers=max_workers,
         preload_samples=True,           # request-keyed streams: sound
-        budget=budget, fuse=fuse,
+        budget=budget, fuse=fuse, survey=survey,
     )
     return discover(request, store=store, refresh=refresh,
                     gc_policy=gc_policy)
@@ -500,7 +731,8 @@ def discover_pallas(model=None, n_samples: int = 9,
                     runner=None, max_workers: int | None = 0,
                     store=None, refresh: bool = False,
                     budget=_DEFAULT_BUDGET, fuse: bool = True,
-                    gc_policy=None) -> tuple[Topology, DiscoveryTimings]:
+                    gc_policy=None, survey: bool = False,
+                    ) -> tuple[Topology, DiscoveryTimings]:
     """Discovery through the real Pallas probe kernels (third backend).
 
     Same engine, same registry, same statistics as ``discover_sim`` — the
@@ -539,7 +771,7 @@ def discover_pallas(model=None, n_samples: int = 9,
 
     request = DiscoveryRequest(
         descriptor=pallas_request_descriptor(model, n_samples, elements,
-                                             budget),
+                                             budget, survey=survey),
         vendor=model.vendor, model=model.name,
         backend=f"pallas-interp:{model.name}",
         make_runner=(lambda: runner) if runner is not None
@@ -549,7 +781,7 @@ def discover_pallas(model=None, n_samples: int = 9,
         max_workers=max_workers,
         clock_domain="interp-cycles",   # chain-length units, timed end-to-end
         preload_samples=False,          # real measurements: always re-measure
-        budget=budget, fuse=fuse,
+        budget=budget, fuse=fuse, survey=survey,
     )
     return discover(request, store=store, refresh=refresh,
                     gc_policy=gc_policy)

@@ -85,6 +85,11 @@ class CachingRunner:
     safe.
     """
 
+    # Capability flag read by the planner's speculative prefetch: repeated
+    # requests are served from the cache, so prefetching candidate rows is
+    # free on replay (bare runners would pay for every speculative row).
+    caches_requests = True
+
     def __init__(self, base, cache: SampleCache | None = None):
         self.base = base
         self.cache = cache if cache is not None else SampleCache()
@@ -266,6 +271,52 @@ class CachingRunner:
         with self.cache._lock:
             self.cache.misses += len(cu_bs)
         return rows
+
+    def eviction_many(self, requests, n_samples):
+        """Mixed eviction-grid batch (§IV-F/G/H): cached rows served,
+        duplicates deduped, the rest in ONE base ``eviction_many`` call.
+
+        Rows share the memo keys of the single-probe paths
+        (``amount_probe`` / ``sharing_probe`` / ``cu_sharing_probe``), so a
+        row fetched through the grid is a cache hit for any later
+        single-probe replay of the same request — and vice versa.
+        """
+        reqs = []
+        keys = []
+        for req in requests:
+            kind = req[0]
+            if kind == "amount":
+                _, space, core_a, core_b, ab = req
+                reqs.append((kind, space, int(core_a), int(core_b), int(ab)))
+                keys.append(("amount", space, int(core_a), int(core_b),
+                             int(ab), int(n_samples)))
+            elif kind == "sharing":
+                _, space_a, space_b, ab = req
+                reqs.append((kind, space_a, space_b, int(ab)))
+                keys.append(("sharing", space_a, space_b, int(ab),
+                             int(n_samples)))
+            elif kind == "cu":
+                _, space, cu_a, cu_b, ab = req
+                reqs.append((kind, space, int(cu_a), int(cu_b), int(ab)))
+                keys.append(("cu", space, int(cu_a), int(cu_b), int(ab),
+                             int(n_samples)))
+            else:
+                raise ValueError(f"unknown eviction request kind: {kind!r}")
+
+        def single(req):
+            if req[0] == "amount":
+                return self.base.amount_probe(req[1], req[2], req[3], req[4],
+                                              n_samples)
+            if req[0] == "sharing":
+                return self.base.sharing_probe(req[1], req[2], req[3],
+                                               n_samples)
+            return self.base.cu_sharing_probe(req[2], req[3], req[4],
+                                              n_samples, space=req[1])
+
+        return self._serve_many(
+            keys, reqs, n_samples,
+            many=getattr(self.base, "eviction_many", None),
+            single=single)
 
     def bandwidth(self, space, mode="read"):
         # floats, not arrays — keyed on the runner side; no need to memoize.

@@ -6,7 +6,8 @@ in its own worker thread against a transparent runner proxy, and each
 runner call **parks** the thread instead of dispatching immediately.  When
 every in-flight item is either finished or parked, the coordinator fuses
 all parked requests that share a runner capability — warm chases onto one
-``pchase_many``, cold passes onto one ``cold_chase_many`` — and executes
+``pchase_many``, cold passes onto one ``cold_chase_many``, eviction-pattern
+probes onto one ``eviction_many`` grid — and executes
 each fused group as a single dispatch on the coordinator thread, then wakes
 the parked items with their slices.
 
@@ -23,10 +24,16 @@ Consequences:
   ``ProbeRunner`` surface, and request-keyed runners return bit-identical
   samples no matter how calls are grouped.
 
-Non-fusable calls (eviction-pattern probes, bandwidth) park too and are
-executed per-request inside the round, preserving the serial-execution
-guarantee.  Per-family timings include parked time and therefore overlap —
-they remain useful as *shares*, not absolute wall seconds.
+Eviction-pattern probes (amount §IV-F, sharing §IV-G, cu-sharing §IV-H)
+fuse too: they park as heterogeneous ``("evict", n_samples)`` rows and every
+round coalesces them onto ONE ``eviction_many`` grid dispatch, mixing the
+three families freely (the runners' eviction-grid capability keeps row i
+bit-identical to the matching single-probe call).  Only bandwidth remains a
+serial ``("exec",)`` call — it reports one scalar from its own stream-kernel
+timing loop, so there is no row batching to coalesce — and it still executes
+per-request inside the round, preserving the serial-execution guarantee.
+Per-family timings include parked time and therefore overlap — they remain
+useful as *shares*, not absolute wall seconds.
 """
 from __future__ import annotations
 
@@ -44,7 +51,7 @@ __all__ = ["FusionDispatcher", "run_fused"]
 class _Pending:
     """One parked runner call awaiting the next fusion round."""
 
-    group: tuple                     # ("pchase", n) | ("cold", n) | ("exec",)
+    group: tuple          # ("pchase", n) | ("cold", n) | ("evict", n) | ("exec",)
     rows: list = field(default_factory=list)   # fused-capability row requests
     thunk: Callable | None = None    # non-fusable: run against the runner
     result: object = None
@@ -63,6 +70,8 @@ class _FusionRunner:
     def __init__(self, dispatcher: "FusionDispatcher"):
         self._d = dispatcher
         self._base = dispatcher.runner
+        # planner prefetch capability mirrors the wrapped runner's caching
+        self.caches_requests = getattr(self._base, "caches_requests", False)
 
     # ------------------------------------------------------ fused: warm
     def pchase(self, space, array_bytes, stride, n_samples):
@@ -95,25 +104,41 @@ class _FusionRunner:
         reqs = [(space, int(ab), int(s)) for space, ab, s in requests]
         return np.stack(self._d.park(("cold", int(n_samples)), reqs))
 
-    # ------------------------------------- serialized, non-fused probes
+    # ------------------------------------------------ fused: eviction grid
+    # Mixed amount/sharing/cu rows share one ("evict", n) group per round
+    # and dispatch as a single eviction_many grid call (§IV-F/G/H).
     def amount_probe(self, space, core_a, core_b, array_bytes, n_samples):
-        return self._d.park_exec(lambda r: r.amount_probe(
-            space, core_a, core_b, array_bytes, n_samples))
+        rows = self._d.park(("evict", int(n_samples)),
+                            [("amount", space, int(core_a), int(core_b),
+                              int(array_bytes))])
+        return rows[0]
 
     def sharing_probe(self, space_a, space_b, array_bytes, n_samples):
-        return self._d.park_exec(lambda r: r.sharing_probe(
-            space_a, space_b, array_bytes, n_samples))
+        rows = self._d.park(("evict", int(n_samples)),
+                            [("sharing", space_a, space_b,
+                              int(array_bytes))])
+        return rows[0]
 
     def cu_sharing_probe(self, cu_a, cu_b, array_bytes, n_samples,
                          space="sL1d"):
-        return self._d.park_exec(lambda r: r.cu_sharing_probe(
-            cu_a, cu_b, array_bytes, n_samples, space=space))
+        rows = self._d.park(("evict", int(n_samples)),
+                            [("cu", space, int(cu_a), int(cu_b),
+                              int(array_bytes))])
+        return rows[0]
 
     def cu_sharing_probe_batch(self, cu_a, cu_bs, array_bytes, n_samples,
                                space="sL1d"):
-        return self._d.park_exec(lambda r: r.cu_sharing_probe_batch(
-            cu_a, cu_bs, array_bytes, n_samples, space=space))
+        reqs = [("cu", space, int(cu_a), int(cu_b), int(array_bytes))
+                for cu_b in cu_bs]
+        return np.stack(self._d.park(("evict", int(n_samples)), reqs))
 
+    def eviction_many(self, requests, n_samples):
+        reqs = [tuple(r) for r in requests]
+        return np.stack(self._d.park(("evict", int(n_samples)), reqs))
+
+    # ------------------------------------------ serialized, non-fused calls
+    # Bandwidth reports one scalar from its own stream-kernel loop — no row
+    # batching exists to coalesce, so it runs per-request inside the round.
     def bandwidth(self, space, mode="read"):
         return self._d.park_exec(lambda r: r.bandwidth(space, mode))
 
@@ -140,8 +165,8 @@ class FusionDispatcher:
     """Round coordinator: park, coalesce, dispatch, wake.
 
     ``runner`` is the engine's ``CachingRunner`` — fused groups land on its
-    ``pchase_many``/``cold_chase_many``, so cached rows are served and
-    duplicate rows across families cost one probe.
+    ``pchase_many``/``cold_chase_many``/``eviction_many``, so cached rows
+    are served and duplicate rows across families cost one probe.
     """
 
     def __init__(self, runner):
@@ -154,24 +179,32 @@ class FusionDispatcher:
         self.fused_calls = 0             # fused-capability dispatches issued
 
     def proxy(self) -> _FusionRunner:
+        """A runner facade whose batch calls park on this dispatcher."""
         return _FusionRunner(self)
 
     # ----------------------------------------------------- thread-side API
     def thread_starting(self) -> None:
+        """Register one item thread as in flight (coordinator waits on 0)."""
         with self._cv:
             self._active += 1
 
     def thread_finished(self) -> None:
+        """Deregister an item thread; wakes a quiescence-waiting coordinator."""
         with self._cv:
             self._active -= 1
             self._cv.notify_all()
 
     def park(self, group: tuple, rows: list) -> list:
+        """Park the calling thread's probe rows under a fusion group key and
+        block until the coordinator dispatches the fused round; returns this
+        caller's slice of the fused result."""
         p = _Pending(group=group, rows=rows)
         self._park(p)
         return p.result
 
     def park_exec(self, thunk: Callable):
+        """Park an arbitrary thunk for serial execution on the coordinator
+        thread (the escape hatch for calls with no fused capability)."""
         p = _Pending(group=("exec",), thunk=thunk)
         self._park(p)
         return p.result
@@ -198,6 +231,7 @@ class FusionDispatcher:
                 self._cv.wait()
 
     def has_pending(self) -> bool:
+        """True while parked rows await a fused dispatch round."""
         with self._cv:
             return bool(self._pending)
 
@@ -224,6 +258,9 @@ class FusionDispatcher:
                 if key[0] == "pchase-fresh":
                     rows = np.asarray(self.runner.pchase_many(
                         all_rows, key[1], fresh=True))
+                elif key[0] == "evict":
+                    rows = np.asarray(self.runner.eviction_many(
+                        all_rows, key[1]))
                 else:
                     fn = (self.runner.pchase_many if key[0] == "pchase"
                           else self.runner.cold_chase_many)

@@ -25,9 +25,28 @@ the boundary, budget exhaustion).  Only the non-discrete floats
 (confidence, p-value) may differ, computed from a window instead of the
 full series.
 
+Two mechanisms keep planned searches cheap in *rounds*, not just rows:
+
+* **speculative quantile prefetch** — before replaying a bisection or
+  descent, the planner fetches the next few generations of integer
+  midpoints the search may visit as ONE fused dispatch
+  (``pchase_many``/``cold_chase_batch``/``eviction_many``), pre-filling
+  the engine's sample cache under the decision procedure's own request
+  keys.  The unchanged procedure then replays over cache hits, so a
+  sequential O(log n) round chain collapses to one or two fused rounds
+  while the lattice, the predicates, and (on request-keyed runners) the
+  row values stay exactly those of the sequential path;
+* **pairwise lattice planning** — the §IV-F amount ladder bisects for the
+  first non-evicting core doubling, and the §IV-G/§IV-H sharing lattices
+  probe hypothesis-first (partition closure for space pairs, closed-pair
+  spot checks for CU pairs), with every accepted shortcut verified by
+  independent rows and any disagreement falling back to the dense
+  pairwise sweep.
+
 ``SweepBudget`` is the knob set carried on ``DiscoveryRequest``: round and
 row ceilings plus an optional target resolution for deliberately coarse
-(non-oracle-identical) scans.
+(non-oracle-identical) scans; ``target_resolution`` also drives the fleet
+survey mode's spot-check margins (see ``core.discover``).
 """
 from __future__ import annotations
 
@@ -35,6 +54,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..probes.amount import (AmountResult, CuSharingResult, SharingResult,
+                             _hit_miss_refs, amount_ladder, find_amount,
+                             find_sharing_batch)
 from ..probes.linesize import (GranularityResult, LineSizeResult,
                                find_fetch_granularity, find_line_size,
                                granularity_refs, line_size_from_first_hit)
@@ -43,10 +65,11 @@ from ..probes.size import (ShiftClassifier, SizeResult, bisect_interval,
                            descend_first_shifted, finalize_size,
                            rescue_change_point, sweep_grid, sweep_rows,
                            widen_interval)
-from ..stats import geometric_reduction
+from ..stats import classify_miss_rows, geometric_reduction
 
 __all__ = ["SweepBudget", "find_size_planned", "find_granularity_planned",
-           "find_line_size_planned"]
+           "find_line_size_planned", "find_amount_planned",
+           "find_sharing_planned", "find_cu_sharing_planned"]
 
 KIB = 1024
 
@@ -114,6 +137,74 @@ def _fetch_window(runner, space: str, sizes: np.ndarray, step: int,
                           batched=True)
 
 
+def _bisect_midpoints(lo: int, hi: int, levels: int,
+                      stop_span=None) -> list[int]:
+    """The next ``levels`` generations of integer midpoints a binary search
+    over ``(lo, hi)`` may visit.
+
+    Enumerates BOTH child intervals of every midpoint — the search visits
+    exactly one path, so roughly half the points are speculative.
+    ``stop_span(a, b)`` prunes branches the search would already have
+    terminated.  The midpoint rule ``(a + b) // 2`` is shared with
+    ``bisect_interval`` and ``descend_first_shifted``, so prefetched points
+    land on exactly the rows the replay asks for.
+    """
+    pts: list[int] = []
+    frontier = [(int(lo), int(hi))]
+    for _ in range(max(int(levels), 0)):
+        nxt: list[tuple[int, int]] = []
+        for a, b in frontier:
+            if b - a <= 1 or (stop_span is not None and stop_span(a, b)):
+                continue
+            mid = (a + b) // 2
+            pts.append(mid)
+            nxt.append((a, mid))
+            nxt.append((mid, b))
+        frontier = nxt
+    return pts
+
+
+def _prefetch_pchase(runner, space: str, reqs, n_samples: int,
+                     meter: "_RowMeter | None" = None) -> None:
+    """Speculative prefetch: fill the sample cache with the warm-chase rows
+    a bisection/descent is most likely to ask for, in ONE fused dispatch.
+
+    ``reqs`` is a list of ``(array_bytes, stride)`` pairs.  The decision
+    procedure then replays unchanged over cache hits — prefetching is
+    result-invisible on request-keyed/cached runners and only converts a
+    sequential round chain into one fused round.  Prefetched rows are
+    charged to the meter when given (conservative: a speculative row the
+    replay never consumes still counts toward ``max_rows``).  Runners
+    without the ``caches_requests`` capability would pay a real probe for
+    every speculative row AND the replay row — skip them entirely.
+    """
+    if not getattr(runner, "caches_requests", False):
+        return
+    uniq = sorted({(int(ab), int(s)) for ab, s in reqs})
+    if not uniq:
+        return
+    try:
+        runner.pchase_many([(space, ab, s) for ab, s in uniq], n_samples)
+    except (AttributeError, TypeError, NotImplementedError):
+        return
+    if meter is not None:
+        meter.charge(len(uniq))
+
+
+def _prefetch_cold(runner, space: str, arrs, strides, n_loads: int,
+                   meter: "_RowMeter | None" = None) -> None:
+    """Cold-capability twin of ``_prefetch_pchase`` (one fused dispatch
+    pre-filling the §IV-D probe's own ``cold_chase_batch`` row keys)."""
+    if not arrs or not getattr(runner, "caches_requests", False):
+        return
+    try:
+        runner.cold_chase_batch(space, list(arrs), list(strides), n_loads)
+    except (AttributeError, NotImplementedError):
+        return
+    if meter is not None:
+        meter.charge(len(arrs))
+
+
 # --------------------------------------------------------------------------
 # §IV-B size search
 # --------------------------------------------------------------------------
@@ -138,16 +229,25 @@ def find_size_planned(runner, space: str, *, budget: SweepBudget,
     meter = _RowMeter(budget)
     rounds = 0
 
-    base = runner.pchase(space, lo, step, n_samples)
-    clf = ShiftClassifier(base, alpha, classification_jump(runner))
-    meter.charge(1)
-
-    # -- coarse pass: chunked doubling ladder
+    # -- coarse pass: chunked doubling ladder.  On caching runners the
+    # base row and the WHOLE ladder go out as one fused dispatch up front —
+    # a probe batch costs one launch regardless of row count, so this beats
+    # paying a launch per chunk even though rungs past the boundary are
+    # speculative; the chunked loop below replays over cache hits and keeps
+    # the identical early-exit decision sequence.
     ladder = []
     size = lo
     while size <= max_bytes:
         size *= 2
         ladder.append(size)
+    _prefetch_pchase(runner, space,
+                     [(lo, step)] + [(sz, step) for sz in ladder],
+                     n_samples, meter)
+
+    base = runner.pchase(space, lo, step, n_samples)
+    clf = ShiftClassifier(base, alpha, classification_jump(runner))
+    meter.charge(1)
+
     first_bad = None
     probed = 0
     for c in range(0, len(ladder), max(budget.ladder_chunk, 1)):
@@ -189,6 +289,17 @@ def find_size_planned(runner, space: str, *, budget: SweepBudget,
         meter.charge(1)
         return clf.shifted(runner.pchase(space, int(sz), step, n_samples))
 
+    # Speculative quantile prefetch: the first three midpoint generations
+    # of the bisection (pruned by its own termination rule) in ONE fused
+    # dispatch; ``bisect_interval`` below replays over cache hits.
+    def _bisect_done(a: int, b: int) -> bool:
+        return b - a <= max(8 * step, (a + b) // 64)
+
+    _prefetch_pchase(
+        runner, space,
+        [(sz, step) for sz in _bisect_midpoints(first_bad // 2, first_bad, 5,
+                                                stop_span=_bisect_done)],
+        n_samples, meter)
     sweep_lo, sweep_hi = bisect_interval(shifted_at, first_bad, step)
 
     eff_floor = step
@@ -224,6 +335,14 @@ def find_size_planned(runner, space: str, *, budget: SweepBudget,
                 meter.charge(1)
             return memo[i]
 
+        # Descent prefetch: the top anchor plus four midpoint generations
+        # of the index bisection (lo_known starts at -1), one fused
+        # dispatch; ``descend_first_shifted`` replays over cache hits and
+        # only its confirm rows near the landing fetch individually.
+        spec = [n - 1] + _bisect_midpoints(-1, n - 1, 5)
+        _prefetch_pchase(runner, space,
+                         [(int(G[i]), step) for i in spec if 0 <= i < n],
+                         n_samples, meter)
         flip = descend_first_shifted(lambda i: clf.shifted(row_at(i)), n)
 
         if (flip <= 2 or flip >= n - 2) and widenings < max_widenings:
@@ -326,6 +445,21 @@ def find_granularity_planned(runner, space: str, *, budget: SweepBudget,
             memo[i] = float(np.mean(np.asarray(row) < thresh)) > min_frac
         return memo[i]
 
+    def prefetch(idxs) -> None:
+        """One fused cold dispatch pre-filling ``mixed``'s own row keys."""
+        todo = sorted({i for i in idxs if 0 <= i < n and i not in memo})
+        _prefetch_cold(
+            runner, space,
+            [max(array_bytes, int(strides[i]) * (n_loads + 1)) for i in todo],
+            [int(strides[i]) for i in todo], n_loads)
+
+    # Speculative prefetch: both anchors plus the first three midpoint
+    # generations of the bisection in ONE fused cold dispatch — the
+    # sequential probes below replay over cache hits, collapsing the
+    # dominant ~log n cold rounds of this search.
+    prefetch(list(range(n - 1 - confirm, n)) + [0, 1, 2]
+             + _bisect_midpoints(0, n - 1 - confirm, 3))
+
     # top anchor: the largest strides must be cleanly all-miss
     if any(mixed(i) for i in range(n - 1 - confirm, n)):
         return dense()
@@ -337,14 +471,24 @@ def find_granularity_planned(runner, space: str, *, budget: SweepBudget,
             return GranularityResult(int(strides[0]), True, strides[:upto], m)
         return dense()
 
+    # Wave bisection: every three halvings, prefetch the next three
+    # midpoint generations of the CURRENT interval as one fused dispatch —
+    # a probe batch costs one launch regardless of row count, so covering
+    # both children of every midpoint is cheaper than one sequential miss.
     lo, hi = 0, n - 1 - confirm
     while hi - lo > 1:
-        mid = (lo + hi) // 2
-        if mixed(mid):
-            lo = mid
-        else:
-            hi = mid
+        prefetch(_bisect_midpoints(lo, hi, 4))
+        for _ in range(4):
+            if hi - lo <= 1:
+                break
+            mid = (lo + hi) // 2
+            if mixed(mid):
+                lo = mid
+            else:
+                hi = mid
     f = hi
+    # Fetch the verification runs below in one fused dispatch too.
+    prefetch([f + k for k in range(confirm + 1)] + [f - 1, f - 2])
     # Run verification: confirm successors all-miss, predecessors mixed.
     # TWO predecessors, not one — the bisection's landing flag and the
     # f-1 verification would otherwise be the same (possibly fluked) row,
@@ -388,10 +532,20 @@ def find_line_size_planned(runner, space: str, cache_size: int,
 
     g2 = max(fetch_granularity // 2, 4)
     arr = int(cache_size * over_factor)
-    pivot = runner.pchase(space, arr, g2, n_samples)
-    hit_ref = runner.pchase(space, arr, max_line * 8, n_samples)
     steps = np.arange(g2, max_line * 2 + g2, g2, dtype=np.int64)
     n = steps.size
+
+    # Speculative prefetch: both references, the anchor steps, and four
+    # midpoint generations of the bisection as ONE fused dispatch — the
+    # sequential ``score`` probes below replay over cache hits.
+    spec = [0, 1, 2, n - 1, n - 2] + _bisect_midpoints(0, n - 1, 5)
+    _prefetch_pchase(runner, space,
+                     [(arr, g2), (arr, max_line * 8)]
+                     + [(arr, int(steps[i])) for i in spec if 0 <= i < n],
+                     n_samples)
+
+    pivot = runner.pchase(space, arr, g2, n_samples)
+    hit_ref = runner.pchase(space, arr, max_line * 8, n_samples)
 
     memo: dict[int, float] = {}
 
@@ -416,15 +570,27 @@ def find_line_size_planned(runner, space: str, cache_size: int,
         return LineSizeResult(-1, False, -1.0, steps,
                               np.array([score(0), score(n - 1)]))
     else:
+        # same wave-prefetched bisection as the granularity planner
         lo, hi = 0, n - 1
         while hi - lo > 1:
-            mid = (lo + hi) // 2
-            if score(mid) > 0:
-                hi = mid
-            else:
-                lo = mid
+            _prefetch_pchase(
+                runner, space,
+                [(arr, int(steps[i]))
+                 for i in _bisect_midpoints(lo, hi, 4) if i not in memo],
+                n_samples)
+            for _ in range(4):
+                if hi - lo <= 1:
+                    break
+                mid = (lo + hi) // 2
+                if score(mid) > 0:
+                    hi = mid
+                else:
+                    lo = mid
         # Verify with an extra independent below-flip row (mirrors the
         # granularity planner): non-monotone scores let dense rule.
+        _prefetch_pchase(runner, space,
+                         [(arr, int(steps[hi - k])) for k in (1, 2)
+                          if hi - k >= 0 and hi - k not in memo], n_samples)
         if any(score(hi - k) > 0 for k in (1, 2) if hi - k >= 0):
             return dense()
         first_hit_step = int(steps[hi])
@@ -433,3 +599,247 @@ def find_line_size_planned(runner, space: str, cache_size: int,
     ks = sorted(memo)
     return LineSizeResult(line, True, raw, steps[ks],
                           np.array([memo[i] for i in ks]))
+
+
+# --------------------------------------------------------------------------
+# §IV-F amount ladder
+# --------------------------------------------------------------------------
+def find_amount_planned(runner, space: str, cache_size: int,
+                        cores_per_sm: int, *, n_samples: int = 65,
+                        budget: SweepBudget) -> AmountResult:
+    """Bisection over the §IV-F core-B doubling ladder (first NON-evicting
+    rung) with memo-consistency verification.
+
+    The dense sweep probes every doubling until core B stops evicting core
+    A; under the paper's segment model the evicts-flag is monotone in the
+    rung index (True below the boundary, False at and above it), so a
+    bisection pins the flip in O(log n) eviction rows.  Every rung the
+    planner *did* probe is then checked against the monotone pattern and
+    the two rungs below the flip are verified independently — any
+    disagreement falls back to the dense ladder, so the discrete answer
+    (amount, first disjoint core) is identical planner-vs-dense.  Rows go
+    out as fused ``eviction_many`` grid calls where the runner supports
+    them (speculative midpoints prefetched with the anchors in ONE
+    dispatch), one ``amount_probe`` per rung otherwise.
+    """
+    def dense() -> AmountResult:
+        return find_amount(runner, space, cache_size, cores_per_sm,
+                           n_samples=n_samples, batched=True)
+
+    bs = amount_ladder(cores_per_sm)
+    if not bs:
+        return AmountResult(1, True, -1, [])
+    arr = int(cache_size * 0.9)
+    hit_ref, miss_ref = _hit_miss_refs(runner, space, arr, cache_size,
+                                       n_samples)
+    meter = _RowMeter(budget)
+    n = len(bs)
+    memo: dict[int, bool] = {}
+
+    def fetch(idxs) -> None:
+        """Probe-and-classify rungs in ONE fused eviction dispatch."""
+        todo = sorted({int(i) for i in idxs if 0 <= i < n and i not in memo})
+        if not todo:
+            return
+        if hasattr(runner, "eviction_many"):
+            rows = np.asarray(runner.eviction_many(
+                [("amount", space, 0, bs[i], arr) for i in todo], n_samples))
+        else:
+            rows = np.stack([runner.amount_probe(space, 0, bs[i], arr,
+                                                 n_samples) for i in todo])
+        meter.charge(len(todo))
+        for i, m in zip(todo, classify_miss_rows(rows, hit_ref, miss_ref)):
+            memo[i] = bool(m)
+
+    def evicts(i: int) -> bool:
+        if i not in memo:
+            fetch([i])
+        return memo[i]
+
+    # anchors + the first two midpoint generations, one fused dispatch
+    fetch([0, n - 1] + _bisect_midpoints(0, n - 1, 2))
+    if meter.exhausted:
+        return dense()
+    if not evicts(0):
+        # core B = 1 already leaves A resident: the dense sweep would stop
+        # at the very first rung
+        return AmountResult(max(cores_per_sm // bs[0], 1), True, bs[0],
+                            [bs[0]])
+    if evicts(n - 1):
+        # no non-evicting rung in sight: complete the ladder (one fused
+        # call for the few unprobed rungs) and demand it be uniformly
+        # evicting — mirroring the dense sweep's full walk exactly
+        fetch(range(n))
+        if any(not memo[i] for i in memo):
+            return dense()
+        return AmountResult(1, True, -1, list(bs))
+
+    lo, hi = 0, n - 1            # evicts(lo) is True, evicts(hi) is False
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if evicts(mid):
+            lo = mid
+        else:
+            hi = mid
+    f = hi
+    # Two independent below-flip rungs must evict (same squared-fluke
+    # argument as the granularity planner), and every memoized rung must
+    # match the monotone pattern the bisection assumed.
+    fetch([f - 1, f - 2])
+    if any(not evicts(f - k) for k in (1, 2) if f - k >= 0):
+        return dense()
+    if any(memo[i] != (i < f) for i in memo):
+        return dense()
+    if meter.exhausted:
+        return dense()
+    tested = [bs[i] for i in sorted(memo) if i <= f]
+    return AmountResult(max(cores_per_sm // bs[f], 1), True, bs[f], tested)
+
+
+# --------------------------------------------------------------------------
+# §IV-G sharing lattice
+# --------------------------------------------------------------------------
+def find_sharing_planned(runner, leaders, n_samples: int = 65, *,
+                         budget: SweepBudget) -> list[SharingResult]:
+    """Partition-closure planning for the §IV-G pairwise sharing lattice.
+
+    ``leaders`` is the registry's ordered leader list — ``(space_a,
+    cache_size, partners)`` triples covering every pair once.  Physical
+    sharing is an equivalence relation (two spaces either occupy one cache
+    or they don't), so once earlier leaders have probed a pair's relation
+    to a common third space ``L`` with at least one positive edge, the
+    pair's own flag is determined: ``a~p iff a~L and p~L``.  When EVERY
+    partner of a leader is inferable this way, the planner spot-checks the
+    first partner with a real probe row and accepts the inferred row on
+    agreement; any disagreement — or any partner without a witnessing
+    ``L`` — issues the dense ``find_sharing_batch`` row for that leader.
+
+    Discrete identity: inferred flags equal dense flags whenever the
+    equivalence hypothesis holds, and the hypothesis is spot-checked per
+    leader; a violation (non-transitive measurements) is caught by the
+    spot row or surfaces as an inference gap, both of which fall back to
+    dense rows.  On lattices with only singleton/pair groups (e.g. the
+    H100-like model) nothing is inferable and the planner degrades to the
+    dense batch — the win is for fabrics where ≥3 spaces alias one cache.
+    """
+    meter = _RowMeter(budget)
+    know: dict[frozenset, bool] = {}
+    past: list[str] = []
+    out: list[SharingResult] = []
+    for space_a, cache_size, partners in leaders:
+        partners = list(partners)
+
+        def infer(p: str):
+            """Flag for (space_a, p) via a witnessing earlier leader."""
+            for lead in past:
+                ka = know.get(frozenset((lead, space_a)))
+                kp = know.get(frozenset((lead, p)))
+                if ka is not None and kp is not None and (ka or kp):
+                    return ka and kp
+            return None
+
+        inferred = [infer(p) for p in partners]
+        if partners and all(v is not None for v in inferred) \
+                and not meter.exhausted:
+            spot = find_sharing_batch(runner, space_a, partners[:1],
+                                      cache_size, n_samples)
+            meter.charge(1)
+            if spot[0].shared == inferred[0]:
+                res = [SharingResult(bool(v), space_a, p)
+                       for v, p in zip(inferred, partners)]
+                for r in res:
+                    know[frozenset((space_a, r.space_b))] = r.shared
+                out.extend(res)
+                past.append(space_a)
+                continue
+            # spot disagreed with the closure: dense row rules (the spot's
+            # request key is cached, so the re-ask costs nothing extra)
+        res = find_sharing_batch(runner, space_a, partners, cache_size,
+                                 n_samples)
+        meter.charge(len(partners))
+        for r in res:
+            know[frozenset((space_a, r.space_b))] = r.shared
+        out.extend(res)
+        past.append(space_a)
+    return out
+
+
+# --------------------------------------------------------------------------
+# §IV-H CU-pair lattice
+# --------------------------------------------------------------------------
+def find_cu_sharing_planned(runner, cu_ids, cache_size: int, *,
+                            n_samples: int = 33, space: str = "sL1d",
+                            budget: SweepBudget) -> CuSharingResult:
+    """Hypothesis-first planning for the §IV-H CU↔sL1d pairwise sweep.
+
+    The dense sweep probes each ungrouped leader against every remaining
+    candidate — O(n^2) eviction rows.  On real parts sL1d sharing comes in
+    small contiguous groups (MI210: adjacent CU pairs), so the planner
+    first spot-checks four candidates per leader (the first two, the
+    middle, the last, in ONE fused eviction dispatch).  Exactly the
+    closed-pair signature — first candidate shared, all other spots
+    disjoint — accepts the hypothesis ``group = {leader, first candidate}``
+    without probing the rest of the row; ANY other signature (including
+    all-disjoint, i.e. an exclusive CU) issues the dense candidate row, so
+    the grouping can only shortcut through the verified pair pattern.
+    Every flag is a per-pair request-keyed row, identical between the spot
+    path and the dense row, so accepted groups match the dense grouping.
+
+    Residual (documented, same contract class as the granularity planner's
+    distant-fluke window): a non-contiguous group larger than two whose
+    extra members dodge all four spot columns would be split — the second
+    member's own leader round then probes densely, bounding the error to
+    that group.  Exhausting ``budget.max_rows`` degrades to dense rows.
+    """
+    cu_ids = list(cu_ids)
+    arr = int(cache_size * 0.9)
+    hit_ref, miss_ref = _hit_miss_refs(runner, space, arr, cache_size,
+                                       n_samples)
+    meter = _RowMeter(budget)
+    flag_memo: dict[tuple[int, int], bool] = {}
+
+    def shared_flags(cu_a: int, cu_bs) -> list[bool]:
+        """Shared-flag for each (cu_a, b) pair; ONE fused eviction call."""
+        todo = [b for b in cu_bs if (cu_a, b) not in flag_memo]
+        if todo:
+            if hasattr(runner, "eviction_many"):
+                rows = np.asarray(runner.eviction_many(
+                    [("cu", space, cu_a, b, arr) for b in todo], n_samples))
+            else:
+                rows = np.stack([runner.cu_sharing_probe(
+                    cu_a, b, arr, n_samples, space=space) for b in todo])
+            meter.charge(len(todo))
+            for b, m in zip(todo, classify_miss_rows(rows, hit_ref,
+                                                     miss_ref)):
+                flag_memo[(cu_a, b)] = bool(m)
+        return [flag_memo[(cu_a, b)] for b in cu_bs]
+
+    assigned: dict[int, int] = {}
+    groups: list[list[int]] = []
+    for i, cu_a in enumerate(cu_ids):
+        if cu_a in assigned:
+            continue
+        group = [cu_a]
+        assigned[cu_a] = len(groups)
+        candidates = [b for b in cu_ids[i + 1:] if b not in assigned]
+        if candidates:
+            done = False
+            if len(candidates) > 3 and not meter.exhausted:
+                mid = len(candidates) // 2
+                spots = list(dict.fromkeys(
+                    [candidates[0], candidates[1], candidates[mid],
+                     candidates[-1]]))
+                fmap = dict(zip(spots, shared_flags(cu_a, spots)))
+                if fmap[candidates[0]] and \
+                        not any(fmap[s] for s in spots if s != candidates[0]):
+                    group.append(candidates[0])
+                    assigned[candidates[0]] = assigned[cu_a]
+                    done = True
+            if not done:
+                for b, m in zip(candidates, shared_flags(cu_a, candidates)):
+                    if m:
+                        group.append(b)
+                        assigned[b] = assigned[cu_a]
+        groups.append(group)
+    exclusive = [g[0] for g in groups if len(g) == 1]
+    return CuSharingResult(groups, exclusive)

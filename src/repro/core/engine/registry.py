@@ -110,7 +110,7 @@ def _run_amount(ctx: ProbeContext):
         return ("per_core", find_amount(ctx.runner, info.name, sr.size,
                                         ctx.runner.cores_per_sm,
                                         n_samples=ctx.n_samples,
-                                        batched=True))
+                                        batched=True, budget=ctx.budget))
     if info.scope == "chip":
         # L2-style alignment happens at assembly time (needs the API total);
         # flag that the family applies so the driver runs align_segments.
@@ -150,16 +150,26 @@ def _run_sharing(ctx: ProbeContext):
     """§IV-G pairwise physical sharing over core-scope cache spaces.
 
     Pair order matches the legacy nested loop (leader a, all partners after
-    it), so the assembled ``shared_with`` lists come out identical.
+    it), so the assembled ``shared_with`` lists come out identical.  With a
+    ``SweepBudget`` on the context the whole leader list goes through the
+    planner's partition-closure lattice (``find_sharing_planned``) — same
+    pair order, inferred-then-spot-checked rows where transitivity allows.
     """
     spaces = [i.name for i in ctx.infos
               if i.supports_sharing and i.scope == "core"]
-    out = []
+    leaders = []
     for i, a in enumerate(spaces):
         sr = ctx.all_results.get(a, {}).get("size")
         if sr is None or not sr.found:
             continue
-        out.extend(find_sharing_batch(ctx.runner, a, spaces[i + 1:], sr.size,
+        leaders.append((a, sr.size, spaces[i + 1:]))
+    if ctx.budget is not None:
+        from .planner import find_sharing_planned
+        return find_sharing_planned(ctx.runner, leaders, ctx.n_samples,
+                                    budget=ctx.budget)
+    out = []
+    for a, size, partners in leaders:
+        out.extend(find_sharing_batch(ctx.runner, a, partners, size,
                                       n_samples=ctx.n_samples))
     return out
 
@@ -174,7 +184,7 @@ def _run_cu_sharing(ctx: ProbeContext):
         return None
     return find_cu_sharing(ctx.runner, cu_ids, sl1d.size,
                            n_samples=max(ctx.n_samples // 2, 9),
-                           batched=True)
+                           batched=True, budget=ctx.budget)
 
 
 def _run_device_memory_latency(ctx: ProbeContext):

@@ -13,7 +13,7 @@ import numpy as np
 
 from ..stats import classify_miss_rows, ks_2samp
 
-__all__ = ["AmountResult", "find_amount", "align_segments",
+__all__ = ["AmountResult", "find_amount", "amount_ladder", "align_segments",
            "SharingResult", "find_sharing", "find_sharing_batch",
            "CuSharingResult", "find_cu_sharing"]
 
@@ -61,8 +61,19 @@ class AmountResult:
     tested_cores: list[int] = field(default_factory=list)
 
 
+def amount_ladder(cores_per_sm: int) -> list[int]:
+    """The §IV-F core-B doubling ladder: 1, 2, 4, ... below cores_per_sm."""
+    bs = []
+    b = 1
+    while b < cores_per_sm:
+        bs.append(b)
+        b *= 2
+    return bs
+
+
 def find_amount(runner, space: str, cache_size: int, cores_per_sm: int,
-                n_samples: int = 65, batched: bool = False) -> AmountResult:
+                n_samples: int = 65, batched: bool = False,
+                budget=None) -> AmountResult:
     """Paper §IV-F: pin core A at 0, double core B's index; the first B index
     on a different segment leaves A's data resident -> amount = cores/B.
 
@@ -70,22 +81,32 @@ def find_amount(runner, space: str, cache_size: int, cores_per_sm: int,
     whole matrix with one vectorized K-S pass; the sequential early-exit
     semantics are replayed on the classification vector, so results are
     identical (request-keyed sampling makes the extra probes side-effect
-    free).
+    free).  The whole ladder goes out as ONE ``eviction_many`` grid call on
+    runners with the eviction capability — one dispatch (and one fusion
+    round) instead of one per doubling.
+
+    ``budget`` (a ``SweepBudget``) routes to the adaptive planner's
+    bisected ladder (``find_amount_planned``) — same discrete answer,
+    fewer probed rows, dense fallback on non-monotonicity.
     """
+    if budget is not None:
+        from ..engine.planner import find_amount_planned
+        return find_amount_planned(runner, space, cache_size, cores_per_sm,
+                                   n_samples=n_samples, budget=budget)
     arr = int(cache_size * 0.9)  # "close to the cache size"
     hit_ref, miss_ref = _hit_miss_refs(runner, space, arr, cache_size,
                                        n_samples)
 
     if batched:
-        bs = []
-        b = 1
-        while b < cores_per_sm:
-            bs.append(b)
-            b *= 2
+        bs = amount_ladder(cores_per_sm)
         if not bs:
             return AmountResult(1, True, -1, [])
-        rows = np.stack([runner.amount_probe(space, 0, b, arr, n_samples)
-                         for b in bs])
+        if hasattr(runner, "eviction_many"):
+            rows = np.asarray(runner.eviction_many(
+                [("amount", space, 0, b, arr) for b in bs], n_samples))
+        else:
+            rows = np.stack([runner.amount_probe(space, 0, b, arr, n_samples)
+                             for b in bs])
         miss = classify_miss_rows(rows, hit_ref, miss_ref)
         tested = []
         for b, m in zip(bs, miss):
@@ -149,8 +170,12 @@ def find_sharing_batch(runner, space_a: str, space_bs: list[str],
     arr = int(cache_size * 0.9)
     hit_ref, miss_ref = _hit_miss_refs(runner, space_a, arr, cache_size,
                                        n_samples)
-    rows = np.stack([runner.sharing_probe(space_a, b, arr, n_samples)
-                     for b in space_bs])
+    if hasattr(runner, "eviction_many"):
+        rows = np.asarray(runner.eviction_many(
+            [("sharing", space_a, b, arr) for b in space_bs], n_samples))
+    else:
+        rows = np.stack([runner.sharing_probe(space_a, b, arr, n_samples)
+                         for b in space_bs])
     miss = classify_miss_rows(rows, hit_ref, miss_ref)
     return [SharingResult(bool(m), space_a, b)
             for m, b in zip(miss, space_bs)]
@@ -164,7 +189,7 @@ class CuSharingResult:
 
 def find_cu_sharing(runner, cu_ids: list[int], cache_size: int,
                     n_samples: int = 33, space: str = "sL1d",
-                    batched: bool = False) -> CuSharingResult:
+                    batched: bool = False, budget=None) -> CuSharingResult:
     """Paper §IV-H: test CU pairs for sL1d sharing; no layout assumptions.
 
     The full pairwise sweep is O(n^2); like MT4G we test all pairs (the paper
@@ -177,7 +202,16 @@ def find_cu_sharing(runner, cu_ids: list[int], cache_size: int,
     the same as in the sequential scan (CUs grouped during a leader's own
     scan are exactly the ones that probe as sharing), so the grouping is
     identical.
+
+    ``budget`` (a ``SweepBudget``) routes to the adaptive planner's
+    hypothesis-first pairwise lattice (``find_cu_sharing_planned``) — spot
+    checked per group, dense candidate row on any disagreement.
     """
+    if budget is not None:
+        from ..engine.planner import find_cu_sharing_planned
+        return find_cu_sharing_planned(runner, cu_ids, cache_size,
+                                       n_samples=n_samples, space=space,
+                                       budget=budget)
     arr = int(cache_size * 0.9)
     hit_ref, miss_ref = _hit_miss_refs(runner, space, arr, cache_size,
                                        n_samples)

@@ -51,6 +51,11 @@ Implementation notes:
 * ``pchase_batch`` maps a whole §IV-B sweep onto the kernel grid in ONE
   launch; ``cold_chase_batch`` does the same for the §IV-D stride sweep
   with per-row chain lengths;
+* the eviction-pattern probes (§IV-F/G/H) ride the same grid trick:
+  ``eviction_many`` maps mixed amount/sharing/cu rows onto
+  ``eviction_kernel_batch`` — each row executes a real warm-B/probe-A
+  two-phase chain (Fig. 3) with both phase lengths as per-row data, and the
+  calibration chain matches the full two-phase launch profile;
 * scratchpad spaces (VMEM/SMEM-like) advertise ``supports_cold=False``:
   end-to-end timing cannot classify individual loads of a cold pass there,
   and the engine registry honors the capability flag by never scheduling
@@ -126,10 +131,16 @@ class PallasRunner:
         self.interpret = bool(interpret)
         self._rng = np.random.default_rng(seed)
         self._perm_cache: dict[int, np.ndarray] = {}
-        self._cal_cache: dict[tuple, np.ndarray] = {}  # (rows, bucket) -> perms
+        self._evictor_cache: dict[int, np.ndarray] = {}
+        self._cal_cache: dict[tuple, np.ndarray] = {}  # (shape, tag) -> perms
         self._cal_cache_cap = 16
-        self._warmed: set[tuple] = set()               # (rows, bucket) shapes
+        self._warmed: set[tuple] = set()               # launch-shape keys
         self.kernel_calls = 0
+        # Eviction-grid utilization (§IV-F/G/H): dispatches vs rows carried.
+        # rows > calls means heterogeneous rows actually coalesced onto
+        # shared grids — the bench's ``eviction_fusion`` gate reads these.
+        self.eviction_grid_calls = 0
+        self.eviction_grid_rows = 0
 
     # ------------------------------------------------------------- spaces
     def spaces(self) -> list[SpaceInfo]:
@@ -185,22 +196,25 @@ class PallasRunner:
             out[i, :n] = self._perm(n)
         return out
 
-    def _cal_perms(self, shape: tuple[int, int]) -> np.ndarray:
+    def _cal_perms(self, shape: tuple[int, int], tag: str = "") -> np.ndarray:
         """Calibration buffers of the given (rows, bucket) launch shape.
 
         Independent random cycles (never the request's own buffers), small
         LRU so sweep-sized grids do not accumulate.  The kernel shape is
         identical to the request's, so the jit cache the request warmed up
         serves the calibration launch too — no extra warm-up dispatch.
+        ``tag`` separates calibration roles that must use distinct buffers
+        at the same shape (e.g. the eviction kernel's probe vs warm side).
         """
-        cal = self._cal_cache.pop(shape, None)
+        key = (shape, tag)
+        cal = self._cal_cache.pop(key, None)
         if cal is None:
             rows, bucket = shape
             cal = np.stack([random_cycle(bucket, self._rng)
                             for _ in range(rows)]).astype(np.int32)
             while len(self._cal_cache) >= self._cal_cache_cap:
                 self._cal_cache.pop(next(iter(self._cal_cache)))
-        self._cal_cache[shape] = cal                    # LRU: re-insert last
+        self._cal_cache[key] = cal                      # LRU: re-insert last
         return cal
 
     def _cal_wall(self, shape: tuple[int, int], steps: np.ndarray) -> float:
@@ -396,6 +410,108 @@ class PallasRunner:
                if self.model.sharing_evicted(space_a, space_b, array_bytes)
                else lvl.latency)
         return self._timed_chase(array_bytes, 64, lat, int(n_samples))
+
+    def cu_sharing_probe(self, cu_a, cu_b, array_bytes, n_samples,
+                         space="sL1d"):
+        """Single §IV-H pair probe (grid path: ``eviction_many``)."""
+        return self.eviction_many(
+            [("cu", space, cu_a, cu_b, array_bytes)], n_samples)[0]
+
+    def _evict_row_latency(self, req) -> tuple[float, int]:
+        """(modeled post-warm probe latency, probe array bytes) of one row."""
+        kind = req[0]
+        if kind == "amount":
+            _, space, core_a, core_b, ab = req
+            evicted = self.model.amount_evicted(space, core_a, core_b, ab)
+        elif kind == "sharing":
+            _, space, space_b, ab = req
+            evicted = self.model.sharing_evicted(space, space_b, ab)
+        elif kind == "cu":
+            _, space, cu_a, cu_b, ab = req
+            evicted = self.model.cu_sharing_evicted(cu_a, cu_b, ab, space)
+        else:
+            raise ValueError(f"unknown eviction request kind: {kind!r}")
+        lat = (self.model.next_level_latency(space) if evicted
+               else self.model.level(space).latency)
+        return lat, int(ab)
+
+    def _evictor_perm(self, n: int) -> np.ndarray:
+        """Evictor-side chase buffer: independent of the probe buffer of the
+        same size (warm phase must walk a *conflicting* working set, never
+        the probe array itself)."""
+        perm = self._evictor_cache.get(n)
+        if perm is None:
+            perm = random_cycle(n, self._rng)
+            self._evictor_cache[n] = perm
+        return perm
+
+    def _stacked_evictors(self, slot_counts: list[int]) -> np.ndarray:
+        """(R, bucket) padded evictor matrix for an eviction grid's rows."""
+        bucket = _pow2_at_least(max(slot_counts))
+        out = np.zeros((len(slot_counts), bucket), dtype=np.int32)
+        for i, n in enumerate(slot_counts):
+            out[i, :n] = self._evictor_perm(n)
+        return out
+
+    def _run_evict(self, perms, evictors, warm, probe) -> float:
+        """One timed launch of the eviction grid kernel; wall seconds."""
+        import jax.numpy as jnp
+
+        from repro.kernels.pchase_probe import eviction_kernel_batch
+
+        t0 = time.perf_counter_ns()
+        eviction_kernel_batch(
+            jnp.asarray(perms), jnp.asarray(evictors),
+            jnp.asarray(warm, dtype=jnp.int32),
+            jnp.asarray(probe, dtype=jnp.int32),
+            interpret=self.interpret).block_until_ready()
+        self.kernel_calls += 1
+        return (time.perf_counter_ns() - t0) * 1e-9
+
+    def eviction_many(self, requests, n_samples):
+        """Mixed §IV-F/G/H rows on ONE eviction-kernel grid per repetition.
+
+        Each row executes the Fig. 3 pattern for real: a warm phase walks
+        the row's evictor cycle once end-to-end (conflicting working set of
+        the probe's footprint), then the timed probe phase walks the probe
+        cycle with a chain length encoding the *modeled* post-warm hit
+        level — evicted rows literally serialize more loads.  The
+        calibration chain matches the full two-phase (rows x bucket,
+        warm+probe steps) launch profile, so the wall ratio cancels both
+        drift and the per-row interpreter overhead, exactly as in
+        ``_timed_grid``.  Replaces one ``_timed_chase`` dispatch (~12
+        launches) per amount/sharing/cu request with a single fused grid.
+        """
+        self.eviction_grid_calls += 1
+        self.eviction_grid_rows += len(requests)
+        params = [self._evict_row_latency(r) for r in requests]
+        lats = np.array([lat for lat, _ in params])
+        slot_counts = [self._slots(ab, 64) for _, ab in params]
+        perms = self._stacked_perms(slot_counts)
+        evictors = self._stacked_evictors(slot_counts)
+        # One full pass over the evictor cycle: the minimal walk that
+        # touches the whole conflicting footprint (and ends back at slot 0).
+        warm = np.asarray(slot_counts, dtype=np.int32)
+        per_row = max(self.base_steps // max(len(requests), 1), 512)
+        ms = np.maximum(np.ceil(per_row / np.maximum(lats, 1.0)), 1.0)
+        probe = np.asarray(np.round(ms * lats), dtype=np.int32)
+        shape_key = ("evict", perms.shape, evictors.shape)
+        if shape_key not in self._warmed:
+            self._run_evict(perms, evictors, warm, probe)
+            self._warmed.add(shape_key)
+        cal_args = (self._cal_perms(perms.shape, "evict-probe"),
+                    self._cal_perms(evictors.shape, "evict-warm"),
+                    warm, probe)
+        cal_a = self._run_evict(*cal_args)
+        half = max(int(n_samples) // 2, 1)
+        walls = [self._run_evict(perms, evictors, warm, probe)
+                 for _ in range(half)]
+        cal_b = self._run_evict(*cal_args)
+        walls += [self._run_evict(perms, evictors, warm, probe)
+                  for _ in range(int(n_samples) - half)]
+        cal_c = self._run_evict(*cal_args)
+        cal = float(np.median([cal_a, cal_b, cal_c]))
+        return lats[:, None] * (np.asarray(walls)[None, :] / cal)
 
     # ---------------------------------------------------------- bandwidth
     def bandwidth(self, space, mode="read"):

@@ -83,6 +83,13 @@ class ProbeRunner(Protocol):
     def sharing_probe(self, space_a: str, space_b: str, array_bytes: int,
                       n_samples: int) -> np.ndarray: ...
 
+    # Heterogeneous eviction-grid capability (§IV-F/G/H): requests mixes
+    # ("amount", space, core_a, core_b, ab), ("sharing", space_a, space_b,
+    # ab) and ("cu", space, cu_a, cu_b, ab) rows; returns (R, n_samples)
+    # with row i bit-identical to the matching single-probe call.  Runners
+    # without multi-actor control raise NotImplementedError.
+    def eviction_many(self, requests, n_samples: int) -> np.ndarray: ...
+
     def bandwidth(self, space: str, mode: str = "read") -> float: ...
 
 
@@ -176,6 +183,10 @@ class SimRunner:
                                space="sL1d"):
         return self.device.cu_sharing_probe_batch(cu_a, cu_bs, array_bytes,
                                                   n_samples, space=space)
+
+    def eviction_many(self, requests, n_samples):
+        """Mixed amount/sharing/cu eviction rows in one fused dispatch."""
+        return self.device.eviction_many(requests, n_samples)
 
     def bandwidth(self, space, mode="read"):
         return self.device.bandwidth(space, mode)
@@ -295,6 +306,9 @@ class HostRunner:
 
     def sharing_probe(self, *a, **k):
         raise NotImplementedError("host runner has a unified cache path")
+
+    def eviction_many(self, *a, **k):
+        raise NotImplementedError("host runner is single-actor")
 
     # --------------------------------------------------------- bandwidth
     def bandwidth(self, space, mode="read", nbytes: int = 128 * 1024**2,

@@ -258,6 +258,17 @@ class SimDevice:
         la, lb = self.level(space_a), self.level(space_b)
         return la.group == lb.group and 2 * int(array_bytes) > la.size
 
+    def cu_sharing_evicted(self, cu_a: int, cu_b: int, array_bytes: int,
+                           space: str = "sL1d") -> bool:
+        """§IV-H eviction model: distinct CUs in one sL1d group, over
+        capacity.  Noise-free twin of ``cu_sharing_probe`` (same predicate),
+        exposed so real runners can reuse it as configured ground truth."""
+        lvl = self.level(space)
+        group_of = self._cu_group_of
+        shared = (cu_a in group_of and cu_b in group_of
+                  and group_of[cu_a] == group_of[cu_b] and cu_a != cu_b)
+        return shared and 2 * int(array_bytes) > lvl.size
+
     # -------------------------------------------------------- probe API
     def _hit_level(self, space: str, array_bytes: int,
                    stride: int) -> tuple[float, float]:
@@ -436,6 +447,52 @@ class SimDevice:
                 means[i], noises[i] = lvl.latency, lvl.noise
             keys.append(("cu", space, int(cu_a), int(cu_b),
                          int(array_bytes), int(n_samples)))
+        return self._lat_rows(means, noises, int(n_samples), keys)
+
+    def eviction_many(self, requests, n_samples: int) -> np.ndarray:
+        """Heterogeneous eviction-pattern batch (§IV-F/G/H in one call).
+
+        ``requests`` mixes rows of three kinds::
+
+            ("amount",  space, core_a, core_b, array_bytes)
+            ("sharing", space_a, space_b, array_bytes)
+            ("cu",      space, cu_a, cu_b, array_bytes)
+
+        Row i is bit-identical to the matching single-probe call
+        (``amount_probe`` / ``sharing_probe`` / ``cu_sharing_probe``): each
+        row reuses that probe's request-keyed stream, so fusing mixed
+        eviction families into one dispatch is result-invisible — the
+        eviction twin of ``pchase_many``.
+        """
+        means = np.empty(len(requests))
+        noises = np.empty(len(requests))
+        keys = []
+        for i, req in enumerate(requests):
+            kind = req[0]
+            if kind == "amount":
+                _, space, core_a, core_b, ab = req
+                lvl = self.level(space)
+                evicted = self.amount_evicted(space, core_a, core_b, ab)
+                keys.append(("amount", space, int(core_a), int(core_b),
+                             int(ab), int(n_samples)))
+            elif kind == "sharing":
+                _, space_a, space_b, ab = req
+                lvl = self.level(space_a)
+                evicted = self.sharing_evicted(space_a, space_b, ab)
+                keys.append(("sharing", space_a, space_b, int(ab),
+                             int(n_samples)))
+            elif kind == "cu":
+                _, space, cu_a, cu_b, ab = req
+                lvl = self.level(space)
+                evicted = self.cu_sharing_evicted(cu_a, cu_b, ab, space)
+                keys.append(("cu", space, int(cu_a), int(cu_b), int(ab),
+                             int(n_samples)))
+            else:
+                raise ValueError(f"unknown eviction request kind: {kind!r}")
+            if evicted:
+                means[i], noises[i] = self._next_latency(lvl), self.mem_noise
+            else:
+                means[i], noises[i] = lvl.latency, lvl.noise
         return self._lat_rows(means, noises, int(n_samples), keys)
 
     def bandwidth(self, space: str, mode: str = "read") -> float:

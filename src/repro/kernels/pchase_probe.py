@@ -16,6 +16,14 @@ sweep maps onto the grid dimension — row i carries its own single-cycle
 permutation (padded to a shared width) and its own chain length, read from
 a per-row scalar so sweeps with different step counts reuse one compiled
 kernel.  This is the runner API ``PallasRunner.pchase_batch`` is built on.
+
+``eviction_kernel_batch`` extends the same trick to the eviction-pattern
+probes (paper §IV-F/§IV-G/§IV-H, Fig. 3): each grid row first walks an
+*evictor* chain (warm phase over buffer B) and then a *probe* chain
+(buffer A), with both phase lengths carried as per-row kernel data.  A row
+with ``warm_steps == 0`` degenerates to a plain p-chase row, which is the
+bit-identity anchor the tests pin.  This is the runner API
+``PallasRunner.eviction_many`` is built on.
 """
 from __future__ import annotations
 
@@ -25,7 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pchase_kernel", "pchase_kernel_batch", "pchase_reference"]
+__all__ = ["pchase_kernel", "pchase_kernel_batch", "pchase_reference",
+           "eviction_kernel_batch", "eviction_reference"]
 
 
 def _kernel(perm_ref, out_ref, *, iters: int):
@@ -100,6 +109,84 @@ def pchase_kernel_batch(perms: jax.Array, steps: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((r, 2), jnp.int32),
         interpret=interpret,
     )(steps, perms)
+
+
+def _evict_kernel(warm_ref, probe_ref, evictor_ref, perm_ref, out_ref):
+    warm = warm_ref[0]
+    probe = probe_ref[0]
+
+    def body_warm(_, carry):
+        cursor, checksum = carry
+        nxt = evictor_ref[0, cursor]
+        return nxt, checksum + nxt
+
+    _, warm_sum = jax.lax.fori_loop(
+        0, warm, body_warm, (jnp.int32(0), jnp.int32(0)))
+
+    def body_probe(_, carry):
+        cursor, checksum = carry
+        nxt = perm_ref[0, cursor]
+        return nxt, checksum + nxt
+
+    cursor, checksum = jax.lax.fori_loop(
+        0, probe, body_probe, (jnp.int32(0), warm_sum))
+    out_ref[0, 0] = cursor
+    out_ref[0, 1] = checksum
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def eviction_kernel_batch(perms: jax.Array, evictors: jax.Array,
+                          warm_steps: jax.Array, probe_steps: jax.Array, *,
+                          interpret: bool = True) -> jax.Array:
+    """Grid-batched eviction-pattern probe (Fig. 3 warm-B / probe-A).
+
+    Row i walks its *evictor* cycle ``evictors[i]`` for ``warm_steps[i]``
+    dependent loads (warming the conflicting working set), then walks its
+    *probe* cycle ``perms[i]`` for ``probe_steps[i]`` loads — the phase the
+    caller times to see whether the warm phase evicted the probe array.
+    Both phase lengths follow the chain-lengths-as-data contract of
+    ``pchase_kernel_batch``: they are per-row kernel *data*, so one compiled
+    kernel serves heterogeneous amount/sharing/cu-sharing rows of any mix,
+    and changing a row's phase lengths never forces a recompile.
+
+    ``perms`` (R, N) and ``evictors`` (R, M) are zero-padded single-cycle
+    permutations; both chains start at slot 0 and never leave their cycle.
+    Returns (R, 2) int32 ``[final_probe_cursor, checksum]`` where the
+    checksum covers both phases.  A row with ``warm_steps == 0`` is
+    bit-identical to the same ``pchase_kernel_batch`` row.
+    """
+    r, n = perms.shape
+    _, m = evictors.shape
+    return pl.pallas_call(
+        _evict_kernel,
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (i,)),
+                  pl.BlockSpec((1, m), lambda i: (i, 0)),
+                  pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 2), jnp.int32),
+        interpret=interpret,
+    )(warm_steps, probe_steps, evictors, perms)
+
+
+def eviction_reference(perm, evictor, warm_steps: int,
+                       probe_steps: int) -> tuple[int, int]:
+    """Pure-Python two-phase walk: the contract for ``eviction_kernel_batch``."""
+    import numpy as np
+
+    checksum = np.int32(0)
+    cursor = 0
+    ev = np.asarray(evictor)
+    for _ in range(int(warm_steps)):
+        cursor = int(ev[cursor])
+        checksum = np.int32(checksum + np.int32(cursor))
+    p = np.asarray(perm)
+    cursor = 0
+    for _ in range(int(probe_steps)):
+        cursor = int(p[cursor])
+        checksum = np.int32(checksum + np.int32(cursor))
+    return cursor, int(checksum)
 
 
 def pchase_reference(perm, steps: int) -> tuple[int, int]:

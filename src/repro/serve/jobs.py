@@ -80,7 +80,7 @@ class QueueFullError(Exception):
 _SIM_ALIASES = {"h100": "sim-h100", "mi210": "sim-mi210", "v5e": "sim-v5e"}
 
 _COMMON_FIELDS = {"backend", "device", "seed", "n_samples", "elements",
-                  "budget", "gc_policy", "refresh"}
+                  "budget", "gc_policy", "refresh", "survey"}
 _BACKEND_FIELDS = {
     "sim": _COMMON_FIELDS,
     "pallas": _COMMON_FIELDS - {"device", "seed"},
@@ -166,6 +166,7 @@ def resolve_discovery(params: dict, store):
     if n_samples < 1:
         raise ValueError(f"n_samples must be >= 1, got {n_samples}")
     refresh = bool(params.get("refresh", False))
+    survey = bool(params.get("survey", False))
     gc_policy = _parse_gc_policy(params.get("gc_policy"))
 
     if backend == "sim":
@@ -181,11 +182,11 @@ def resolve_discovery(params: dict, store):
         elements = _parse_elements(params.get("elements"))
         budget = _parse_budget(params.get("budget"))
         descriptor = sim_request_descriptor(device, n_samples, elements,
-                                            budget)
+                                            budget, survey=survey)
 
         run = lambda: discover_sim(  # noqa: E731 — close over parsed args
             device, n_samples, elements, store=store, refresh=refresh,
-            budget=budget, gc_policy=gc_policy)
+            budget=budget, gc_policy=gc_policy, survey=survey)
 
     elif backend == "pallas":
         from ..core.discover import discover_pallas
@@ -197,10 +198,10 @@ def resolve_discovery(params: dict, store):
         from ..core.probes.pallas_runner import make_pallas_model
         model = make_pallas_model()
         descriptor = pallas_request_descriptor(model, n_samples, elements,
-                                               budget)
+                                               budget, survey=survey)
         run = lambda: discover_pallas(  # noqa: E731
             model, n_samples, elements, store=store, refresh=refresh,
-            budget=budget, gc_policy=gc_policy)
+            budget=budget, gc_policy=gc_policy, survey=survey)
 
     else:                                                   # host
         from ..core.discover import discover_host

@@ -24,8 +24,8 @@ BASELINE = [
      "derived": "cold=320000us_warm_speedup=500.0x_batched_qps=170000_"
                 "found=2000/2000_identical=True"},
     {"name": "pallas_interp", "us": 3000000.0,
-     "derived": "discrete_ok=True_store_hit=True_warm_speedup=9000.0x_"
-                "kernel_calls=800"},
+     "derived": "discrete_ok=True_store_hit=True_eviction_fusion=True_"
+                "warm_speedup=9000.0x_kernel_calls=470"},
 ]
 
 
@@ -95,17 +95,28 @@ class TestCompareRules:
         assert any("identical" in f for f in report.failures)
 
     def test_kernel_calls_ceiling_and_regression(self):
-        """ISSUE 4 acceptance: pallas_interp kernel_calls <= 950, and
+        """ISSUE 8 acceptance: pallas_interp kernel_calls <= 500, and
         creeping regressions beyond tol hard-fail even under the ceiling."""
         report = compare(_rows(
             pallas_interp="discrete_ok=True_store_hit=True_"
+                          "eviction_fusion=True_"
                           "warm_speedup=9000.0x_kernel_calls=1200"), BASELINE)
         assert any("above hard ceiling" in f for f in report.failures)
         assert any("kernel_calls regressed" in f for f in report.failures)
         report = compare(_rows(
             pallas_interp="discrete_ok=True_store_hit=True_"
-                          "warm_speedup=9000.0x_kernel_calls=850"), BASELINE)
+                          "eviction_fusion=True_"
+                          "warm_speedup=9000.0x_kernel_calls=495"), BASELINE)
         assert report.ok                  # within tol and under the ceiling
+
+    def test_eviction_fusion_flip_fails(self):
+        """ISSUE 8: eviction rows quietly leaving the fused grids is a
+        correctness-of-structure regression, not a timing one."""
+        report = compare(_rows(
+            pallas_interp="discrete_ok=True_store_hit=True_"
+                          "eviction_fusion=False_"
+                          "warm_speedup=9000.0x_kernel_calls=470"), BASELINE)
+        assert any("eviction_fusion" in f for f in report.failures)
 
     def test_found_fraction_drop_fails(self):
         report = compare(_rows(

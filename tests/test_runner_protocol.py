@@ -171,6 +171,102 @@ class TestEvictionProbes:
                 runner.sharing_probe("a", "b", 4 * KIB, 7)
 
 
+class TestEvictionMany:
+    """The heterogeneous eviction-grid capability (§IV-F/G/H fused rows)."""
+
+    @staticmethod
+    def _mixed_requests(runner):
+        """Mixed amount/sharing/cu rows from whatever the backend supports."""
+        reqs = []
+        amount = [i for i in runner.spaces() if i.supports_amount]
+        if amount:
+            info = amount[0]
+            ab = int(info.max_bytes // 8 * 0.9)
+            reqs += [("amount", info.name, 0, 1, ab),
+                     ("amount", info.name, 0, 2, ab)]
+        sharing = [i for i in runner.spaces() if i.supports_sharing]
+        if sharing:
+            info = sharing[0]
+            ab = int(info.max_bytes // 8 * 0.9)
+            reqs.append(("sharing", info.name, info.name, ab))
+        cu_ids = runner.cu_ids() if hasattr(runner, "cu_ids") else []
+        if len(cu_ids) >= 2:
+            sl1d = next(i for i in runner.spaces() if i.name == "sL1d")
+            reqs.append(("cu", "sL1d", cu_ids[0], cu_ids[1],
+                         int(sl1d.max_bytes // 8 * 0.9)))
+        return reqs
+
+    def test_batch_equals_loop(self, backend):
+        """One grid dispatch must reproduce the per-kind single probes —
+        bit-identical on deterministic runners, structurally valid on
+        measuring ones.  Single-actor backends must refuse instead."""
+        runner = backend["runner"]
+        reqs = self._mixed_requests(runner)
+        if not reqs:
+            with pytest.raises(NotImplementedError):
+                runner.eviction_many(
+                    [("amount", "anything", 0, 1, 4 * KIB)], 7)
+            return
+        batch = np.asarray(runner.eviction_many(reqs, 7))
+        assert batch.shape == (len(reqs), 7)
+        assert np.all(np.isfinite(batch)) and np.all(batch > 0)
+        if not runner.deterministic:
+            return
+        for i, req in enumerate(reqs):
+            if req[0] == "amount":
+                row = runner.amount_probe(req[1], req[2], req[3], req[4], 7)
+            elif req[0] == "sharing":
+                row = runner.sharing_probe(req[1], req[2], req[3], 7)
+            else:
+                row = runner.cu_sharing_probe(req[2], req[3], req[4], 7,
+                                              space=req[1])
+            assert np.array_equal(batch[i], np.asarray(row)), req
+
+    def test_cu_rows_bit_identical_on_cu_device(self):
+        """AMD-style device: fused cu rows == cu_sharing_probe, exactly."""
+        from repro.core import make_mi210_like
+
+        runner = SimRunner(make_mi210_like(seed=5))
+        ids = runner.cu_ids()
+        assert len(ids) >= 2
+        sl1d = next(i for i in runner.spaces() if i.name == "sL1d")
+        ab = int(sl1d.max_bytes // 8 * 0.9)
+        reqs = [("cu", "sL1d", ids[0], b, ab) for b in ids[1:4]]
+        batch = np.asarray(runner.eviction_many(reqs, 9))
+        for i, (_, _, a, b, arr) in enumerate(reqs):
+            assert np.array_equal(
+                batch[i],
+                np.asarray(runner.cu_sharing_probe(a, b, arr, 9)))
+
+    def test_unknown_kind_rejected(self):
+        runner = SimRunner(make_h100_like(seed=3))
+        with pytest.raises(ValueError):
+            runner.eviction_many([("park", "L1", 0, 1, 4 * KIB)], 7)
+
+    def test_caching_runner_dedupes_and_replays(self):
+        """Duplicate rows in one grid cost one base fetch; a repeat call —
+        or a later single-probe of the same request — costs zero."""
+        from repro.core.engine import SampleCache
+        from repro.core.engine.cache import CachingRunner
+
+        runner = CachingRunner(SimRunner(make_h100_like(seed=3)),
+                               cache=SampleCache())
+        reqs = self._mixed_requests(runner)
+        assert reqs
+        doubled = reqs + [reqs[0]]
+        first = np.asarray(runner.eviction_many(doubled, 7))
+        assert runner.cache.stats()["misses"] == len(reqs)
+        assert np.array_equal(first[0], first[-1])
+
+        again = np.asarray(runner.eviction_many(doubled, 7))
+        assert runner.cache.stats()["misses"] == len(reqs)  # all hits now
+        assert np.array_equal(first, again)
+        # single-probe replay of a grid-fetched row: also a hit
+        a = reqs[0]
+        runner.amount_probe(a[1], a[2], a[3], a[4], 7)
+        assert runner.cache.stats()["misses"] == len(reqs)
+
+
 class TestBandwidth:
     def test_read_write_positive(self, backend):
         runner = backend["runner"]
