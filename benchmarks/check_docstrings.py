@@ -43,6 +43,8 @@ STRICT_FILES = (
     "src/repro/serve/http.py",
     "src/repro/serve/jobs.py",
     "src/repro/core/discover.py",
+    "src/repro/core/errors.py",
+    "src/repro/core/probes/chaos.py",
     "src/repro/core/engine/engine.py",
     "src/repro/core/engine/planner.py",
     "src/repro/core/engine/fusion.py",

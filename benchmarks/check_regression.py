@@ -85,6 +85,16 @@ GATES: dict[str, dict] = {
         "costs": ("kernel_calls",),
         "cost_ceilings": {"kernel_calls": 500.0},
     },
+    # ISSUE 9 tentpole row: fault-tolerant discovery.  Clean-vs-faulted
+    # topology equivalence, graceful degradation, and zero-recompute
+    # checkpoint resume are all correctness (hard-gated); the
+    # faulted/clean wall-time ratio is a cost with a hard ceiling —
+    # retries must cost bounded re-dispatches, never a from-scratch rerun.
+    "fault_recovery": {
+        "bools": ("equivalent", "degraded_ok", "resume_ok", "ok"),
+        "costs": ("retry_overhead",),
+        "cost_ceilings": {"retry_overhead": 3.0},
+    },
 }
 
 
@@ -249,6 +259,9 @@ def self_test() -> int:
         {"name": "remote_discovery", "us": 800000.0,
          "derived": "completed=3/3_retried_ok=True_idem_ok=True_"
                      "correct=True_ok=True"},
+        {"name": "fault_recovery", "us": 70000.0,
+         "derived": "equivalent=True_degraded_ok=True_resume_ok=True_"
+                     "retry_overhead=1.10_ok=True"},
     ]
     clean = [
         {"name": "engine_speedup", "us": 170000.0,
@@ -268,6 +281,9 @@ def self_test() -> int:
         {"name": "remote_discovery", "us": 1100000.0,  # slower wall: warn only
          "derived": "completed=3/3_retried_ok=True_idem_ok=True_"
                      "correct=True_ok=True"},
+        {"name": "fault_recovery", "us": 82000.0,      # slower wall: warn only
+         "derived": "equivalent=True_degraded_ok=True_resume_ok=True_"
+                     "retry_overhead=1.15_ok=True"},
     ]
     speed_regressed = json.loads(json.dumps(clean))
     speed_regressed[0]["derived"] = \
@@ -306,6 +322,13 @@ def self_test() -> int:
     remote_incomplete = json.loads(json.dumps(clean))
     remote_incomplete[5]["derived"] = remote_incomplete[5]["derived"] \
         .replace("completed=3/3", "completed=2/3")
+    recovery_broken = json.loads(json.dumps(clean))
+    recovery_broken[6]["derived"] = recovery_broken[6]["derived"] \
+        .replace("resume_ok=True", "resume_ok=False") \
+        .replace("ok=True", "ok=False")
+    retry_runaway = json.loads(json.dumps(clean))
+    retry_runaway[6]["derived"] = retry_runaway[6]["derived"] \
+        .replace("retry_overhead=1.15", "retry_overhead=3.40")  # over ceiling
 
     checks = [
         ("clean run passes", compare(clean, baseline).ok, True),
@@ -333,6 +356,10 @@ def self_test() -> int:
          compare(remote_broken, baseline).ok, False),
         ("remote-discovery incomplete jobs fail",
          compare(remote_incomplete, baseline).ok, False),
+        ("checkpoint-resume break fails",
+         compare(recovery_broken, baseline).ok, False),
+        ("runaway retry overhead fails",
+         compare(retry_runaway, baseline).ok, False),
     ]
     bad = [label for label, got, want in checks if got != want]
     for label, got, want in checks:

@@ -505,6 +505,112 @@ def bench_remote_discovery() -> None:
         f"idem_ok={idem_ok}_correct={correct}_ok={ok}")
 
 
+def bench_fault_recovery() -> None:
+    """ISSUE 9 tentpole row: discovery reliability under injected faults.
+
+    Four legs against one h100 sim device, all hard-gated except the
+    overhead ratio's exact value:
+
+    * ``equivalent`` — a discovery under a value-preserving transient
+      fault schedule (every fault retried by the engine) is
+      ``topology_equivalent`` to the clean run;
+    * ``degraded_ok`` — a permanently-failing family lands as an
+      ``"unknown"`` attribute with ``degraded`` provenance instead of
+      aborting the run;
+    * ``resume_ok`` — a discovery killed mid-run leaves a checkpoint, and
+      the rerun resumes from it re-probing ZERO persisted rows (exact
+      sample-cache miss arithmetic) before producing the equivalent
+      topology and clearing the spent checkpoint;
+    * ``retry_overhead`` — faulted/clean wall-time ratio, gated against a
+      ceiling: retries must cost bounded re-dispatches, not a rerun.
+    """
+    import tempfile
+
+    from repro.core import make_h100_like
+    from repro.core.discover import (DiscoveryRequest, discover,
+                                     discover_sim, sim_request_descriptor)
+    from repro.core.engine.store import TopologyStore, request_key
+    from repro.core.errors import Resilience
+    from repro.core.probes import ChaosRunner, FaultSchedule, SimRunner
+    from repro.core.topology import PROVENANCE_DEGRADED, topology_equivalent
+
+    n = 9
+    families = ("sharing", "device_memory_latency",
+                "device_memory_bandwidth")
+    policy = Resilience(max_retries=3, sleep=lambda _s: None)
+
+    def request(make_runner, resilience=policy):
+        dev = make_h100_like(seed=3)
+        return DiscoveryRequest(
+            descriptor=sim_request_descriptor(dev, n, None,
+                                              resilience=resilience),
+            vendor=dev.vendor, model=dev.name,
+            backend=f"simulated:{dev.name}",
+            make_runner=make_runner, n_samples=n,
+            device_families=families, resilience=resilience)
+
+    # leg 1: clean vs transient-faulted equivalence (+ overhead ratio)
+    t0 = time.perf_counter()
+    clean_topo, clean_t = discover_sim(make_h100_like(seed=3), n_samples=n)
+    clean_s = time.perf_counter() - t0
+    chaos = {}
+
+    def mk_flaky():
+        chaos["r"] = ChaosRunner(
+            SimRunner(make_h100_like(seed=3)),
+            FaultSchedule(seed=11, transient_rate=0.05,
+                          max_faults_per_request=1))
+        return chaos["r"]
+
+    t0 = time.perf_counter()
+    faulted_topo, faulted_t = discover(request(mk_flaky))
+    faulted_s = time.perf_counter() - t0
+    equivalent = (chaos["r"].faults_injected > 0
+                  and faulted_t.meta["resilience"]["retries"] > 0
+                  and faulted_t.meta["resilience"]["degraded"] == []
+                  and topology_equivalent(clean_topo, faulted_topo,
+                                          rel_tol=1e-6))
+    retry_overhead = faulted_s / clean_s
+
+    # leg 2: permanent fault degrades the family, never aborts the run
+    topo, t = discover(request(
+        lambda: ChaosRunner(SimRunner(make_h100_like(seed=3)),
+                            FaultSchedule(seed=7,
+                                          permanent_kinds=("bandwidth",)))))
+    attr = topo.find_memory("L2").attrs.get("read_bw")
+    degraded_ok = ("L2/bandwidth" in t.meta["resilience"]["degraded"]
+                   and attr is not None and attr.value == "unknown"
+                   and attr.provenance == PROVENANCE_DEGRADED)
+
+    # leg 3: kill mid-run, resume from the checkpoint with zero recompute
+    with tempfile.TemporaryDirectory() as td:
+        store = TopologyStore(os.path.join(td, "store"))
+        try:
+            discover(request(
+                lambda: ChaosRunner(SimRunner(make_h100_like(seed=3)),
+                                    FaultSchedule(seed=5, kill_after=40))),
+                store=store)
+            resume_ok = False            # the kill never fired: no resume
+        except RuntimeError:
+            key = request_key(request(
+                lambda: SimRunner(make_h100_like(seed=3))).descriptor)
+            ckpt = store.load_checkpoint(key)
+            resumed, rt = discover(request(
+                lambda: SimRunner(make_h100_like(seed=3))), store=store)
+            resume_ok = (
+                ckpt is not None
+                and rt.meta["resume"]["rows"] == len(ckpt[0])
+                and rt.meta["cache"]["misses"] + len(ckpt[0])
+                == clean_t.meta["cache"]["misses"]
+                and topology_equivalent(clean_topo, resumed, rel_tol=1e-6)
+                and not store.has_checkpoint(key))
+
+    ok = equivalent and degraded_ok and resume_ok
+    row("fault_recovery", faulted_s * 1e6,
+        f"equivalent={equivalent}_degraded_ok={degraded_ok}_"
+        f"resume_ok={resume_ok}_retry_overhead={retry_overhead:.2f}_ok={ok}")
+
+
 # ------------------------------------------------------------- framework
 def bench_roofline() -> None:
     """Roofline terms per (arch x shape) from the dry-run artifacts."""
@@ -574,7 +680,7 @@ ALL_BENCHES = (bench_table1_coverage, bench_table3_validation,
                bench_fig2_reduction, bench_runtime_breakdown,
                bench_engine_speedup, bench_adaptive_speedup,
                bench_topology_query, bench_topology_http,
-               bench_remote_discovery,
+               bench_remote_discovery, bench_fault_recovery,
                bench_pallas_interp, bench_fig5_stream,
                bench_perfmodel, bench_link_adjacency, bench_roofline,
                bench_kernels, bench_train_step)

@@ -11,6 +11,7 @@ from .discover import (DiscoveryRequest, DiscoveryTimings, discover,
                        discover_sim_legacy, spec_from_topology)
 from .engine.planner import SweepBudget
 from .engine.store import GcPolicy
+from .errors import DegradedResult, Resilience, TransientRunnerError
 
 __all__ = [
     "Attribute", "ComputeElement", "Link", "MemoryElement", "Topology",
@@ -21,4 +22,5 @@ __all__ = [
     "DiscoveryRequest", "DiscoveryTimings", "discover", "discover_host",
     "discover_pallas", "discover_sim", "discover_sim_legacy",
     "spec_from_topology", "SweepBudget", "GcPolicy",
+    "DegradedResult", "Resilience", "TransientRunnerError",
 ]

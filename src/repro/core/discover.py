@@ -45,14 +45,16 @@ from typing import Callable
 import numpy as np
 
 from .catalog import HardwareSpec
+from .errors import DegradedResult
 from .probes.amount import align_segments, find_amount, find_cu_sharing, find_sharing
 from .probes.bandwidth import measure_bandwidth
 from .probes.latency import measure_latency
 from .probes.linesize import find_fetch_granularity, find_line_size
 from .probes.runners import HostRunner, SimRunner
 from .probes.size import find_size
-from .topology import (PROVENANCE_API, PROVENANCE_BENCHMARK, ComputeElement,
-                       MemoryElement, Topology)
+from .topology import (PROVENANCE_API, PROVENANCE_BENCHMARK,
+                       PROVENANCE_DEGRADED, ComputeElement, MemoryElement,
+                       Topology)
 
 __all__ = ["DiscoveryTimings", "DiscoveryRequest", "discover",
            "discover_sim", "discover_sim_legacy", "discover_host",
@@ -125,7 +127,7 @@ def _budget_descriptor(budget) -> dict | None:
 
 def sim_request_descriptor(device, n_samples: int,
                            elements: list[str] | None, budget=None,
-                           survey: bool = False) -> dict:
+                           survey: bool = False, resilience=None) -> dict:
     """Everything that determines a ``discover_sim`` result — and nothing
     that does not.  Worker count, engine-vs-legacy, batching, and fusion
     are excluded: request-keyed sample streams make them result-invisible
@@ -134,7 +136,10 @@ def sim_request_descriptor(device, n_samples: int,
     devices), so the key addresses that equivalence class.  A ``budget``
     IS part of the key (planned confidence metrics come from a window, not
     the full series); ``budget=None`` keys exactly as before, so existing
-    stores stay valid."""
+    stores stay valid.  A ``resilience`` policy keys in only through its
+    statistical knobs (``Resilience.descriptor_entry``): retry/backoff
+    settings never change what a clean run measures, so a resilient rerun
+    of a clean request is a pure store hit."""
     d = {
         "kind": "discover_sim",
         "backend": f"simulated:{device.name}",
@@ -146,6 +151,9 @@ def sim_request_descriptor(device, n_samples: int,
     }
     if budget is not None:
         d["budget"] = _budget_descriptor(budget)
+    res_entry = None if resilience is None else resilience.descriptor_entry()
+    if res_entry is not None:
+        d["resilience"] = res_entry
     if survey:
         # Survey results are spot-check-verified copies, not full measures —
         # they must never collide with a full run's key.  Only present when
@@ -166,7 +174,7 @@ def host_request_descriptor(max_bytes: int, n_samples: int,
 def pallas_request_descriptor(model, n_samples: int,
                               elements: list[str] | None,
                               budget=_DEFAULT_BUDGET,
-                              survey: bool = False) -> dict:
+                              survey: bool = False, resilience=None) -> dict:
     """Content address of a ``discover_pallas`` request.
 
     Keyed like the sim descriptor — model identity + seed + sample count +
@@ -174,7 +182,9 @@ def pallas_request_descriptor(model, n_samples: int,
     served through the same ``TopologyStore`` machinery as sim/host ones.
     Measured values vary run to run (real timings); the *request* is what
     is addressed.  The budget defaults to the backend's default
-    (``SweepBudget()``), matching ``discover_pallas``.
+    (``SweepBudget()``), matching ``discover_pallas``.  ``resilience`` keys
+    in only through ``Resilience.descriptor_entry`` (statistical knobs),
+    exactly as on the sim descriptor.
     """
     if budget is _DEFAULT_BUDGET:
         budget = default_sweep_budget()
@@ -188,6 +198,9 @@ def pallas_request_descriptor(model, n_samples: int,
         "elements": sorted(elements) if elements else None,
         "budget": _budget_descriptor(budget),
     }
+    res_entry = None if resilience is None else resilience.descriptor_entry()
+    if res_entry is not None:
+        d["resilience"] = res_entry
     if survey:
         d["survey"] = True      # keyed apart from full runs (see sim twin)
     return d
@@ -460,6 +473,14 @@ class DiscoveryRequest:
     # ready probe rounds into single batched dispatches.  Kernel execution
     # stays serial, so it composes with timing-sensitive backends.
     fuse: bool = False
+    # Fault-tolerance policy (errors.Resilience): per-item transient retry
+    # with graceful degradation, plus — with a store and preloadable
+    # samples — periodic checkpointing so an interrupted discovery resumes
+    # without re-probing persisted rows.  The policy's statistical knobs
+    # must already be reflected in ``descriptor`` (the wrappers handle
+    # this); retry knobs deliberately are not (they never change what a
+    # clean run measures).
+    resilience: object | None = None
     # Fleet survey mode: instead of a full discovery, verify a stored
     # sibling topology (same vendor/model/backend, full provenance) with a
     # planned spot-check subset of probe rows and write it through under
@@ -515,33 +536,89 @@ def discover(request: DiscoveryRequest, *, store=None, refresh: bool = False,
         persisted = store.load_samples(key)
         if persisted:
             cache.preload(persisted)
+        elif request.resilience is not None:
+            # Resume path: an interrupted resilient discovery left a
+            # checkpoint (sample cache + completed families) instead of a
+            # final topology.  Preloading it re-serves every persisted
+            # probe row from disk, so the rerun re-probes zero of them.
+            ckpt = store.load_checkpoint(key)
+            if ckpt is not None:
+                entries, families = ckpt
+                cache.preload(entries)
+                timings.meta["resume"] = {"rows": len(entries),
+                                          "families_done": len(families)}
 
     runner = request.make_runner()
+    checkpoint = None
+    if (store is not None and request.resilience is not None
+            and request.preload_samples):
+        # Checkpoint write-through: after each completed work item, persist
+        # the sample cache + completed-item manifest under the request key.
+        # Gated on ``preload_samples`` because resume re-serves recorded
+        # rows — only sound for request-keyed (replayable) runners.
+        done_items: list[str] = []
+
+        def checkpoint(item_key):
+            done_items.append("/".join(map(str, item_key)))
+            store.put_checkpoint(key, cache.snapshot(), done_items)
+
     if request.plan is None:
         eng = run_probes(runner, n_samples=request.n_samples,
                          elements=request.elements,
                          device_families=request.device_families,
                          max_workers=request.max_workers, timings=timings,
                          cache=cache, budget=request.budget,
-                         fuse=request.fuse)
+                         fuse=request.fuse, resilience=request.resilience,
+                         checkpoint=checkpoint)
         timings.meta["cache"] = eng.cache_stats
         timings.meta["planned"] = request.budget is not None
+        if eng.degraded or eng.retries:
+            timings.meta["resilience"] = {
+                "retries": eng.retries,
+                "degraded": [d.key for d in eng.degraded]}
         topo = _assemble_engine_topology(request, runner, eng, timings)
     else:
         cached = CachingRunner(runner, cache=cache)
         sched = run_work_items(request.plan(cached),
                                max_workers=request.max_workers,
-                               timings=timings)
+                               timings=timings,
+                               resilience=request.resilience,
+                               on_item_done=checkpoint)
         timings.meta["cache"] = cached.cache.stats()
         topo = request.assemble(sched, timings)
 
     if store is not None:
         _store_persist(store, key, request.descriptor, topo, timings,
                        cache=cache)
+        if checkpoint is not None:
+            # The run completed and persisted: its checkpoint is spent.
+            store.clear_checkpoint(key)
         if gc_policy is not None:
             store.gc(max_entries=gc_policy.max_entries,
                      max_age_s=gc_policy.max_age_s)
     return topo, timings
+
+
+# Degraded probe family -> the topology attribute it would have filled.
+_DEGRADED_ATTR = {"size": "size", "fetch_granularity": "fetch_granularity",
+                  "latency": "load_latency", "line_size": "line_size",
+                  "amount": "amount", "bandwidth": "read_bw"}
+
+
+def _mark_degraded(topo: Topology, element, family: str, dr) -> None:
+    """Record one degraded probe family on its element.
+
+    Graceful degradation's assembly half: the attribute the family would
+    have measured lands as ``"unknown"`` with ``degraded`` provenance and
+    zero confidence, and the retry diagnostics go into the report notes —
+    the topology stays structurally complete instead of aborting, and the
+    gap is attributable (paper's reliability contract: never silently
+    report a value that was not measured)."""
+    attr = _DEGRADED_ATTR.get(family, family)
+    element.set(attr, "unknown", "", PROVENANCE_DEGRADED, 0.0)
+    topo.notes.append(
+        f"{element.name}/{family}: degraded after {dr.attempts} attempts "
+        f"({dr.error})")
 
 
 def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
@@ -551,7 +628,10 @@ def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
 
     Backend-neutral by construction: API capacities come from the runner's
     ``api_size`` hook, core counts from ``cores_per_sm`` — never from a
-    concrete device object.
+    concrete device object.  Families that exhausted their transient-retry
+    budget arrive as ``errors.DegradedResult`` sentinels; each is recorded
+    via ``_mark_degraded`` (attribute ``"unknown"``, ``degraded``
+    provenance) instead of crashing the assembly.
     """
     topo = Topology(vendor=request.vendor, model=request.model,
                     backend=request.backend)
@@ -567,7 +647,9 @@ def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
         me = MemoryElement(info.name, info.kind, info.scope)
 
         sr = res["size"]
-        if sr.found:
+        if isinstance(sr, DegradedResult):
+            _mark_degraded(topo, me, "size", sr)
+        elif sr.found:
             if info.scope == "chip":
                 # Paper Table I: L2-style totals come from the API; the
                 # benchmark contributes the per-core segment size (§IV-F.1).
@@ -581,23 +663,33 @@ def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
                         f"K-S change point — size result is suspect")
 
         gr = res.get("fetch_granularity")
-        if gr is not None and gr.found:
+        if isinstance(gr, DegradedResult):
+            _mark_degraded(topo, me, "fetch_granularity", gr)
+        elif gr is not None and gr.found:
             me.set("fetch_granularity", gr.granularity, "B",
                    PROVENANCE_BENCHMARK, 1.0)
 
         lat = res["latency"]
-        me.set("load_latency", round(lat.p50, 1), "cyc", PROVENANCE_BENCHMARK)
-        me.set("load_latency_mean", round(lat.mean, 1), "cyc",
-               PROVENANCE_BENCHMARK)
-        me.set("load_latency_p95", round(lat.p95, 1), "cyc",
-               PROVENANCE_BENCHMARK)
+        if isinstance(lat, DegradedResult):
+            _mark_degraded(topo, me, "latency", lat)
+        else:
+            me.set("load_latency", round(lat.p50, 1), "cyc",
+                   PROVENANCE_BENCHMARK)
+            me.set("load_latency_mean", round(lat.mean, 1), "cyc",
+                   PROVENANCE_BENCHMARK)
+            me.set("load_latency_p95", round(lat.p95, 1), "cyc",
+                   PROVENANCE_BENCHMARK)
 
         ls = res.get("line_size")
-        if ls is not None and ls.found:
+        if isinstance(ls, DegradedResult):
+            _mark_degraded(topo, me, "line_size", ls)
+        elif ls is not None and ls.found:
             me.set("line_size", ls.line_size, "B", PROVENANCE_BENCHMARK, 1.0)
 
         am = res.get("amount")
-        if am is not None:
+        if isinstance(am, DegradedResult):
+            _mark_degraded(topo, me, "amount", am)
+        elif am is not None:
             kind, payload = am
             if kind == "per_core" and payload.found:
                 me.set("amount", payload.amount, "", PROVENANCE_BENCHMARK, 1.0)
@@ -611,7 +703,9 @@ def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
                        conf)
 
         bw = res.get("bandwidth")
-        if bw is not None:
+        if isinstance(bw, DegradedResult):
+            _mark_degraded(topo, me, "bandwidth", bw)
+        elif bw is not None:
             me.set("read_bw", round(bw.read_bw / 1e9, 1), "GB/s",
                    PROVENANCE_BENCHMARK)
             me.set("write_bw", round(bw.write_bw / 1e9, 1), "GB/s",
@@ -619,7 +713,12 @@ def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
         topo.memory.append(me)
 
     # ---- physical sharing between logical spaces (NVIDIA-style, §IV-G)
-    for share in eng.device_results.get("sharing", []):
+    shares = eng.device_results.get("sharing", [])
+    if isinstance(shares, DegradedResult):
+        topo.notes.append(f"sharing: degraded after {shares.attempts} "
+                          f"attempts ({shares.error})")
+        shares = []
+    for share in shares:
         if not share.shared:
             continue
         ma = topo.find_memory(share.space_a)
@@ -631,7 +730,11 @@ def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
 
     # ---- AMD-style CU<->sL1d sharing (§IV-H)
     cus = eng.device_results.get("cu_sharing")
-    if cus is not None:
+    if isinstance(cus, DegradedResult):
+        sl1d = topo.find_memory(request.cu_space)
+        if sl1d is not None:
+            _mark_degraded(topo, sl1d, "cu_sharing", cus)
+    elif cus is not None:
         sl1d = topo.find_memory(request.cu_space)
         sl1d.shared_with = [",".join(map(str, g)) for g in cus.groups
                             if len(g) > 1]
@@ -641,12 +744,19 @@ def _assemble_engine_topology(request: DiscoveryRequest, runner, eng,
     if "device_memory_latency" in eng.device_results:
         dm = MemoryElement("DeviceMemory", "memory", "chip")
         lat = eng.device_results["device_memory_latency"]
-        dm.set("load_latency", round(lat.p50, 1), "cyc", PROVENANCE_BENCHMARK)
-        bw = eng.device_results["device_memory_bandwidth"]
-        dm.set("read_bw", round(bw.read_bw / 1e9, 1), "GB/s",
-               PROVENANCE_BENCHMARK)
-        dm.set("write_bw", round(bw.write_bw / 1e9, 1), "GB/s",
-               PROVENANCE_BENCHMARK)
+        if isinstance(lat, DegradedResult):
+            _mark_degraded(topo, dm, "latency", lat)
+        else:
+            dm.set("load_latency", round(lat.p50, 1), "cyc",
+                   PROVENANCE_BENCHMARK)
+        bw = eng.device_results.get("device_memory_bandwidth")
+        if isinstance(bw, DegradedResult):
+            _mark_degraded(topo, dm, "bandwidth", bw)
+        elif bw is not None:
+            dm.set("read_bw", round(bw.read_bw / 1e9, 1), "GB/s",
+                   PROVENANCE_BENCHMARK)
+            dm.set("write_bw", round(bw.write_bw / 1e9, 1), "GB/s",
+                   PROVENANCE_BENCHMARK)
         topo.memory.append(dm)
 
     topo.notes.append(
@@ -665,6 +775,7 @@ def discover_sim(device, n_samples: int = 33,
                  engine: bool = True, max_workers: int | None = None,
                  store=None, refresh: bool = False, budget=None,
                  fuse: bool = False, gc_policy=None, survey: bool = False,
+                 resilience=None,
                  ) -> tuple[Topology, DiscoveryTimings]:
     """Full MT4G-style discovery of a simulated device.
 
@@ -684,9 +795,15 @@ def discover_sim(device, n_samples: int = 33,
     stored sibling topology with a planned spot-check subset instead of a
     full discovery, writing it through under this request's key with
     ``survey`` provenance; see ``DiscoveryRequest.survey``.
+
+    ``resilience`` (an ``errors.Resilience``) turns on fault tolerance:
+    transient probe failures are retried with capped backoff, families past
+    the budget degrade to ``"unknown"`` attributes instead of aborting,
+    and — with a ``store`` — the run checkpoints after every completed
+    work item so an interrupted discovery resumes without re-probing.
     """
     descriptor = sim_request_descriptor(device, n_samples, elements, budget,
-                                        survey=survey)
+                                        survey=survey, resilience=resilience)
 
     if not engine:
         key = None
@@ -717,7 +834,7 @@ def discover_sim(device, n_samples: int = 33,
         device_families=tuple(device_families),
         max_workers=max_workers,
         preload_samples=True,           # request-keyed streams: sound
-        budget=budget, fuse=fuse, survey=survey,
+        budget=budget, fuse=fuse, survey=survey, resilience=resilience,
     )
     return discover(request, store=store, refresh=refresh,
                     gc_policy=gc_policy)
@@ -731,7 +848,7 @@ def discover_pallas(model=None, n_samples: int = 9,
                     runner=None, max_workers: int | None = 0,
                     store=None, refresh: bool = False,
                     budget=_DEFAULT_BUDGET, fuse: bool = True,
-                    gc_policy=None, survey: bool = False,
+                    gc_policy=None, survey: bool = False, resilience=None,
                     ) -> tuple[Topology, DiscoveryTimings]:
     """Discovery through the real Pallas probe kernels (third backend).
 
@@ -771,7 +888,8 @@ def discover_pallas(model=None, n_samples: int = 9,
 
     request = DiscoveryRequest(
         descriptor=pallas_request_descriptor(model, n_samples, elements,
-                                             budget, survey=survey),
+                                             budget, survey=survey,
+                                             resilience=resilience),
         vendor=model.vendor, model=model.name,
         backend=f"pallas-interp:{model.name}",
         make_runner=(lambda: runner) if runner is not None
@@ -781,7 +899,7 @@ def discover_pallas(model=None, n_samples: int = 9,
         max_workers=max_workers,
         clock_domain="interp-cycles",   # chain-length units, timed end-to-end
         preload_samples=False,          # real measurements: always re-measure
-        budget=budget, fuse=fuse, survey=survey,
+        budget=budget, fuse=fuse, survey=survey, resilience=resilience,
     )
     return discover(request, store=store, refresh=refresh,
                     gc_policy=gc_policy)

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from ..errors import DegradedResult
 from .cache import CachingRunner, SampleCache
 from .registry import (DEVICE_FAMILIES, ProbeContext, space_probe_specs)
 from .scheduler import WorkItem, run_work_items
@@ -34,13 +35,16 @@ class EngineResult:
     order: list = field(default_factory=list)           # completion order
     cache_stats: dict = field(default_factory=dict)
     wall_seconds: float = 0.0
+    degraded: list = field(default_factory=list)        # DegradedResult, in order
+    retries: int = 0                                    # transient retries spent
 
 
 def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
                *, device_families: tuple[str, ...] = (),
                max_workers: int | None = None, timings=None,
                cache: SampleCache | None = None, budget=None,
-               fuse: bool = False) -> EngineResult:
+               fuse: bool = False, resilience=None,
+               checkpoint=None) -> EngineResult:
     """Run the full registry against ``runner`` through the engine.
 
     ``device_families`` selects which device-scoped families to schedule
@@ -53,6 +57,14 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
     cross-family fusion dispatcher: concurrently ready items coalesce their
     probe rounds into single ``pchase_many``/``cold_chase_many`` dispatches
     (``max_workers`` is ignored in fused mode).
+
+    ``resilience`` (an ``errors.Resilience``) turns on per-item transient
+    retry with graceful degradation: an item that exhausts its retry
+    budget lands as an ``errors.DegradedResult`` in the results (collected
+    in ``EngineResult.degraded``) instead of aborting the run, and the
+    policy's statistical knobs thread into the probe context.
+    ``checkpoint(key)`` fires after every completed work item — the
+    discovery layer's sample-cache write-through hook.
     """
     cached = CachingRunner(runner, cache=cache)
     dispatcher = None
@@ -68,7 +80,25 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
     space_results: dict[str, dict] = {i.name: {} for i in infos}
     shared_ctx = ProbeContext(runner=probe_runner, n_samples=n_samples,
                               all_results=space_results, infos=infos,
-                              budget=budget)
+                              budget=budget, resilience=resilience)
+
+    degraded: list[DegradedResult] = []
+
+    def on_exhausted(it, exc, attempts):
+        """Stand-in result for an item past its retry budget.
+
+        Space items write their result into ``space_results`` from inside
+        ``fn`` — which raised — so the sentinel must be planted here for
+        dependent families to see it (they all check ``.found`` first).
+        """
+        space, fam = it.key
+        dr = DegradedResult(family=fam, key=f"{space}/{fam}",
+                            error=f"{type(exc).__name__}: {exc}",
+                            attempts=attempts)
+        degraded.append(dr)
+        if space in space_results:
+            space_results[space][fam] = dr
+        return dr
 
     items: list[WorkItem] = []
     scheduled: set[tuple[str, str]] = set()
@@ -77,7 +107,7 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
         ctx = ProbeContext(runner=probe_runner, n_samples=n_samples,
                            info=info, results=space_results[info.name],
                            all_results=space_results, infos=infos,
-                           budget=budget)
+                           budget=budget, resilience=resilience)
 
         def fn(_results, spec=spec, ctx=ctx, name=info.name):
             value = spec.run(ctx)
@@ -113,7 +143,9 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
                               deps=deps, family=bucket))
 
     sched = run_work_items(items, max_workers=max_workers, timings=timings,
-                           fuser=dispatcher)
+                           fuser=dispatcher, resilience=resilience,
+                           on_exhausted=on_exhausted if resilience else None,
+                           on_item_done=checkpoint)
 
     device_results = {fam: sched.results[(DEVICE_KEY, fam)]
                       for fam in device_families
@@ -125,4 +157,6 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
         order=sched.order,
         cache_stats=cached.cache.stats(),
         wall_seconds=sched.wall_seconds,
+        degraded=degraded,
+        retries=sched.retries,
     )

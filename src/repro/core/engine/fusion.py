@@ -44,6 +44,8 @@ from typing import Callable
 
 import numpy as np
 
+from ..errors import TransientRunnerError
+
 __all__ = ["FusionDispatcher", "run_fused"]
 
 
@@ -177,6 +179,7 @@ class FusionDispatcher:
         self._aborted = False
         self.rounds = 0                  # fusion rounds dispatched
         self.fused_calls = 0             # fused-capability dispatches issued
+        self.split_rounds = 0            # fused dispatches split after a fault
 
     def proxy(self) -> _FusionRunner:
         """A runner facade whose batch calls park on this dispatcher."""
@@ -270,11 +273,47 @@ class FusionDispatcher:
                 for p in ps:
                     p.result = [rows[at + j] for j in range(len(p.rows))]
                     at += len(p.rows)
+            except TransientRunnerError:
+                # A fault inside a fused dispatch must not fail every item
+                # that happened to share the round: split the group into
+                # per-row single calls so only genuinely failing rows
+                # poison their pending (already-fetched rows are served by
+                # the caching runner at zero cost).
+                self.split_rounds += 1
+                for p in ps:
+                    try:
+                        p.result = [self._single_row(key, r) for r in p.rows]
+                    except BaseException as e:  # noqa: BLE001 — delivered
+                        p.error = e
             except BaseException as e:  # noqa: BLE001 — delivered per item
                 for p in ps:
                     p.error = e
         for p in batch:
             p.event.set()
+
+    def _single_row(self, group: tuple, row: tuple):
+        """Serve one fused-group row via its single-probe equivalent (the
+        split-and-retry fallback after a fused dispatch faulted)."""
+        kind, n = group[0], group[1]
+        if kind == "pchase":
+            space, ab, stride = row
+            return np.asarray(self.runner.pchase(space, ab, stride, n))
+        if kind == "pchase-fresh":
+            return np.asarray(self.runner.pchase_many([row], n,
+                                                      fresh=True))[0]
+        if kind == "cold":
+            space, ab, stride = row
+            return np.asarray(self.runner.cold_chase(space, ab, stride, n))
+        tag = row[0]                     # evict rows carry their own kind
+        if tag == "amount":
+            _, space, a, b, ab = row
+            return np.asarray(self.runner.amount_probe(space, a, b, ab, n))
+        if tag == "sharing":
+            _, sa, sb, ab = row
+            return np.asarray(self.runner.sharing_probe(sa, sb, ab, n))
+        _, space, a, b, ab = row
+        return np.asarray(self.runner.cu_sharing_probe(a, b, ab, n,
+                                                       space=space))
 
     def abort(self, exc: BaseException) -> None:
         """Release every parked thread with ``exc`` (error teardown)."""
@@ -287,12 +326,20 @@ class FusionDispatcher:
             p.event.set()
 
 
-def run_fused(items, dispatcher: FusionDispatcher, *, timings=None):
+def run_fused(items, dispatcher: FusionDispatcher, *, timings=None,
+              resilience=None, on_exhausted=None, on_item_done=None):
     """Execute work items with round-based fusion (see module docstring).
 
     Dependency semantics match ``run_work_items``: an item starts once its
     deps completed; newly released items join the *current* round before it
     dispatches, so their first probes fuse with everyone else's.
+
+    Fault tolerance mirrors the unfused scheduler: with a ``resilience``
+    policy, an item that failed on a ``TransientRunnerError`` is restarted
+    (up to ``max_retries`` times, capped backoff) — its already-fetched
+    rows replay from the caching runner, so a retry only re-probes what
+    actually failed — and past the budget it degrades through
+    ``on_exhausted`` instead of aborting the whole fused run.
     """
     from .scheduler import ScheduleResult, check_items
 
@@ -303,6 +350,7 @@ def run_fused(items, dispatcher: FusionDispatcher, *, timings=None):
     lock = threading.Lock()
     finished: list[tuple] = []
     threads: dict = {}
+    attempts: dict = {}                  # item key -> transient retries spent
 
     def ready(it) -> bool:
         return all(d in out.results for d in it.deps)
@@ -337,6 +385,23 @@ def run_fused(items, dispatcher: FusionDispatcher, *, timings=None):
         for it, value, err, dt in done:
             threads.pop(it.key).join()
             if err is not None:
+                transient = (resilience is not None
+                             and isinstance(err, TransientRunnerError))
+                spent = attempts.get(it.key, 0)
+                if transient and spent < resilience.max_retries:
+                    resilience.sleep(resilience.backoff(spent))
+                    attempts[it.key] = spent + 1
+                    out.retries += 1
+                    start(it)            # restart; cached rows replay free
+                    continue
+                if (transient and resilience.degrade
+                        and on_exhausted is not None):
+                    out.degraded.append(it.key)
+                    out.results[it.key] = on_exhausted(it, err, spent + 1)
+                    out.order.append(it.key)
+                    if on_item_done is not None:
+                        on_item_done(it.key)
+                    continue
                 dispatcher.abort(RuntimeError(
                     f"work item {it.key!r} failed; fusion round aborted"))
                 raise err
@@ -344,6 +409,8 @@ def run_fused(items, dispatcher: FusionDispatcher, *, timings=None):
             out.order.append(it.key)
             if timings is not None and it.family:
                 timings.add(it.family, dt)
+            if on_item_done is not None:
+                on_item_done(it.key)
         newly = [i for i in list(pending.values()) if ready(i)]
         for it in newly:
             del pending[it.key]

@@ -43,6 +43,7 @@ class ProbeContext:
     all_results: dict = field(default_factory=dict)  # space -> family -> result
     infos: list = field(default_factory=list)        # probed SpaceInfos, in order
     budget: object | None = None        # SweepBudget -> adaptive planner
+    resilience: object | None = None    # errors.Resilience -> MAD/resample
 
 
 @dataclass(frozen=True)
@@ -65,7 +66,8 @@ def _run_size(ctx: ProbeContext):
     step0 = 4 if info.kind == "scratchpad" else 32
     return find_size(ctx.runner, info.name, lo=1 * KIB, step=step0,
                      n_samples=ctx.n_samples, max_bytes=info.max_bytes,
-                     batched=True, budget=ctx.budget)
+                     batched=True, budget=ctx.budget,
+                     robust=ctx.resilience)
 
 
 def _run_fetch_granularity(ctx: ProbeContext):

@@ -21,6 +21,8 @@ from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable
 
+from ..errors import TransientRunnerError
+
 __all__ = ["WorkItem", "ScheduleResult", "run_work_items", "check_items"]
 
 
@@ -40,9 +42,14 @@ class WorkItem:
 
 @dataclass
 class ScheduleResult:
+    """Scheduler output: item results, completion order, wall time, and the
+    fault-tolerance tallies (transient retries spent, items degraded)."""
+
     results: dict = field(default_factory=dict)
     order: list = field(default_factory=list)    # completion order
     wall_seconds: float = 0.0
+    retries: int = 0                             # transient retries spent
+    degraded: list = field(default_factory=list)  # keys past the budget
 
 
 def check_items(items: list[WorkItem]) -> dict:
@@ -58,7 +65,8 @@ def check_items(items: list[WorkItem]) -> dict:
 
 
 def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
-                   timings=None, fuser=None) -> ScheduleResult:
+                   timings=None, fuser=None, resilience=None,
+                   on_exhausted=None, on_item_done=None) -> ScheduleResult:
     """Execute ``items`` respecting dependencies; returns results + order.
 
     ``max_workers=0`` runs everything inline on the calling thread in
@@ -73,13 +81,27 @@ def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
     probe dispatch is coalesced and executed serially by the coordinator —
     see ``engine/fusion.py``.  ``max_workers`` is ignored in that mode.
 
+    Fault tolerance (``resilience``, an ``errors.Resilience``): an item
+    raising ``TransientRunnerError`` is re-attempted up to
+    ``resilience.max_retries`` times with capped exponential backoff.  Past
+    the budget, if ``resilience.degrade`` and ``on_exhausted`` is given,
+    ``on_exhausted(item, exc, attempts)`` supplies the item's stand-in
+    result (recorded in ``ScheduleResult.degraded``) and scheduling
+    continues; otherwise the error propagates as before.  Non-transient
+    exceptions always propagate — a deterministic bug must not be retried
+    into a topology.  ``on_item_done(key)`` fires after each item lands
+    (the checkpoint write-through hook); it runs on the coordinating
+    thread in every mode, so callbacks need no locking.
+
     Raises on unknown dependencies or cycles (both indicate a registry bug,
     not a runtime condition worth limping through).
     """
     if fuser is not None:
         from .fusion import run_fused
 
-        return run_fused(items, fuser, timings=timings)
+        return run_fused(items, fuser, timings=timings,
+                         resilience=resilience, on_exhausted=on_exhausted,
+                         on_item_done=on_item_done)
 
     by_key = check_items(items)
 
@@ -100,6 +122,27 @@ def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
                 timings.add(it.family, dt)
         return value
 
+    def attempt(it: WorkItem):
+        """``run_one`` under the resilience policy: retry transients with
+        capped backoff, then degrade (via ``on_exhausted``) or re-raise."""
+        attempts = 0
+        while True:
+            try:
+                return run_one(it)
+            except TransientRunnerError as exc:
+                if resilience is None:
+                    raise
+                if attempts >= resilience.max_retries:
+                    if resilience.degrade and on_exhausted is not None:
+                        with lock:
+                            out.degraded.append(it.key)
+                        return on_exhausted(it, exc, attempts + 1)
+                    raise
+                resilience.sleep(resilience.backoff(attempts))
+                attempts += 1
+                with lock:
+                    out.retries += 1
+
     if max_workers is None:
         import os
         cores = os.cpu_count() or 1
@@ -114,9 +157,11 @@ def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
                 raise ValueError("dependency cycle among work items: "
                                  f"{sorted(map(str, pending))}")
             for it in ready_now:
-                out.results[it.key] = run_one(it)
+                out.results[it.key] = attempt(it)
                 out.order.append(it.key)
                 del pending[it.key]
+                if on_item_done is not None:
+                    on_item_done(it.key)
         out.wall_seconds = time.perf_counter() - t_start
         return out
 
@@ -124,7 +169,7 @@ def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
         futures = {}
         for it in list(pending.values()):
             if ready(it):
-                futures[pool.submit(run_one, it)] = it
+                futures[pool.submit(attempt, it)] = it
                 del pending[it.key]
         while futures:
             done, _ = wait(list(futures), return_when=FIRST_COMPLETED)
@@ -132,9 +177,11 @@ def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
                 it = futures.pop(fut)
                 out.results[it.key] = fut.result()   # re-raises item errors
                 out.order.append(it.key)
+                if on_item_done is not None:
+                    on_item_done(it.key)
             for it in list(pending.values()):
                 if ready(it):
-                    futures[pool.submit(run_one, it)] = it
+                    futures[pool.submit(attempt, it)] = it
                     del pending[it.key]
         if pending:
             raise ValueError(

@@ -14,6 +14,7 @@ Layout under the store root::
 
     topologies/<key>.json   # {"meta": {...}, "topology": Topology.to_json()}
     samples/<key>.npz       # SampleCache entries (manifest + row arrays)
+    checkpoints/<key>.npz   # in-progress discovery state (resume path)
     corrupt/                # quarantined unreadable files (recovery path)
 
 Writes are atomic (temp file + ``os.replace``); reads that hit corrupted
@@ -62,16 +63,23 @@ class StoreLock:
     POSIX: ``flock`` on a dedicated lock file — released automatically by
     the OS if the holder dies, so no stale-lock handling is needed.
     Fallback: an exclusive-create lockfile holding the owner pid, polled
-    with a timeout; locks older than ``stale_seconds`` are broken (the
-    holder crashed before unlinking).
+    with a timeout; locks older than ``stale_seconds`` whose recorded
+    holder pid is verifiably dead are broken (the holder crashed before
+    unlinking).
 
     File locks only order *processes* reliably: ``flock`` semantics between
     two descriptors in one process are platform-dependent (fcntl-emulated
     flock — NFS mounts, some libcs — treats record locks as per-process, so
-    a second thread "acquires" immediately), and the fallback's stale-break
-    can unlink a lockfile a sibling thread just created.  A process-wide
+    a second thread "acquires" immediately).  A process-wide
     ``threading.Lock`` layered *under* the file lock serializes threads
     first, so the file lock only ever arbitrates between processes.
+
+    The stale break is liveness-checked and atomic (``_break_stale``): a
+    lock whose holder pid is still alive is never broken regardless of
+    age, and the break renames the lockfile aside and verifies (by stat
+    identity) that the renamed file is the one it sampled — so a breaker
+    racing a fresh acquisition can never unlink a lockfile another holder
+    just created, the race the pre-fix docstring documented.
     """
 
     def __init__(self, path: str, *, timeout: float = 30.0,
@@ -106,12 +114,7 @@ class StoreLock:
                     self._tls.fd = fd
                     break
                 except FileExistsError:
-                    try:
-                        age = time.time() - os.path.getmtime(self.path)
-                        if age > self.stale_seconds:
-                            os.unlink(self.path)       # break a dead holder
-                            continue
-                    except OSError:
+                    if self._break_stale():
                         continue
                     if time.monotonic() > deadline:
                         self._thread_gate.release()
@@ -120,6 +123,63 @@ class StoreLock:
                             f"{self.path}")
                     time.sleep(self.poll)
         self._tls.depth = 1
+
+    def _break_stale(self) -> bool:
+        """Safely break a stale fallback lockfile; True = retry the acquire.
+
+        Guards (in order) against the documented race where an age-only
+        break unlinks a lockfile another holder just created:
+
+        1. a lock younger than ``stale_seconds`` is never touched;
+        2. a lock whose recorded holder pid is still alive is never
+           touched, regardless of age (a long critical section is not a
+           crash);
+        3. the break renames the lockfile aside and verifies by stat
+           identity (inode + mtime) that the renamed file is the one it
+           sampled — a mismatch means a fresh sibling lock was displaced,
+           and it is restored via ``os.link`` (which cannot clobber a
+           newer lockfile) instead of being destroyed.
+        """
+        try:
+            st = os.stat(self.path)
+        except OSError:
+            return True                    # holder released: retry at once
+        if time.time() - st.st_mtime <= self.stale_seconds:
+            return False
+        pid = None
+        try:
+            with open(self.path) as f:
+                pid = int(f.read().strip() or "0")
+        except (OSError, ValueError):
+            pid = None                     # unreadable pid: treat as dead
+        if pid:
+            try:
+                os.kill(pid, 0)
+                return False               # holder alive: never break
+            except ProcessLookupError:
+                pass                       # verifiably dead: break below
+            except OSError:
+                return False               # alive under another uid, etc.
+        trash = f"{self.path}.stale.{os.getpid()}.{threading.get_ident()}"
+        try:
+            os.rename(self.path, trash)
+        except OSError:
+            return True                    # lost the break race: retry
+        restored = False
+        try:
+            st2 = os.stat(trash)
+            if (st2.st_ino, st2.st_mtime_ns) != (st.st_ino, st.st_mtime_ns):
+                # We displaced a FRESH lock created after our stat: put it
+                # back (link fails harmlessly if yet another lock appeared
+                # meanwhile — it never overwrites).
+                with contextlib.suppress(OSError):
+                    os.link(trash, self.path)
+                restored = True
+        except OSError:
+            pass
+        with contextlib.suppress(OSError):
+            os.unlink(trash)
+        return not restored
 
     def release(self) -> None:
         depth = self._depth
@@ -201,8 +261,9 @@ class TopologyStore:
         self.root = os.path.abspath(root)
         self._topo_dir = os.path.join(self.root, "topologies")
         self._samples_dir = os.path.join(self.root, "samples")
+        self._ckpt_dir = os.path.join(self.root, "checkpoints")
         self._corrupt_dir = os.path.join(self.root, "corrupt")
-        for d in (self._topo_dir, self._samples_dir):
+        for d in (self._topo_dir, self._samples_dir, self._ckpt_dir):
             os.makedirs(d, exist_ok=True)
         self._lock = StoreLock(os.path.join(self.root, ".lock"))
         self.hits = 0
@@ -225,6 +286,9 @@ class TopologyStore:
 
     def _samples_path(self, key: str) -> str:
         return os.path.join(self._samples_dir, f"{key}.npz")
+
+    def _ckpt_path(self, key: str) -> str:
+        return os.path.join(self._ckpt_dir, f"{key}.npz")
 
     @staticmethod
     def _atomic_write(path: str, data: bytes) -> None:
@@ -335,8 +399,10 @@ class TopologyStore:
         return any(n.startswith(prefix) for n in names)
 
     def delete(self, key: str) -> None:
+        """Remove every artifact of ``key``: topology, samples, checkpoint."""
         with self._lock:
-            for path in (self._topo_path(key), self._samples_path(key)):
+            for path in (self._topo_path(key), self._samples_path(key),
+                         self._ckpt_path(key)):
                 try:
                     os.remove(path)
                 except FileNotFoundError:
@@ -417,6 +483,65 @@ class TopologyStore:
             self._quarantine(path)
             return None
 
+    # -------------------------------------------------------- checkpoints
+    def put_checkpoint(self, key: str, entries: dict,
+                       families: list | None = None) -> None:
+        """Persist an in-progress discovery's state under ``key``.
+
+        ``entries`` is the live ``SampleCache`` snapshot (tuple keys ->
+        sample arrays) and ``families`` the completed work-item keys, so an
+        interrupted ``discover()`` resumes by preloading the rows and — via
+        the request-keyed cache — re-probes zero of them.  Written
+        atomically under the store lock, same as the sample archive it
+        will become.
+        """
+        manifest = []
+        arrays = {}
+        for i, (k, arr) in enumerate(entries.items()):
+            manifest.append(list(k))
+            arrays[f"a{i}"] = np.asarray(arr)
+        buf = io.BytesIO()
+        np.savez_compressed(buf, manifest=json.dumps(manifest),
+                            families=json.dumps([list(f) if isinstance(f, (list, tuple)) else f
+                                                 for f in (families or [])]),
+                            **arrays)
+        with self._lock:
+            self._atomic_write(self._ckpt_path(key), buf.getvalue())
+
+    def load_checkpoint(self, key: str) -> tuple[dict, list] | None:
+        """``(entries, completed families)`` for ``key``, or None.
+
+        Corrupted checkpoints quarantine and miss — a damaged checkpoint
+        degrades to a from-scratch run, never a crash.
+        """
+        path = self._ckpt_path(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            with np.load(path, allow_pickle=False) as data:
+                manifest = json.loads(str(data["manifest"]))
+                families = json.loads(str(data["families"]))
+                entries = {tuple(k): data[f"a{i}"]
+                           for i, k in enumerate(manifest)}
+            return entries, [tuple(f) if isinstance(f, list) else f
+                             for f in families]
+        except (ValueError, KeyError, OSError, json.JSONDecodeError,
+                zipfile.BadZipFile):
+            self._quarantine(path)
+            return None
+
+    def clear_checkpoint(self, key: str) -> None:
+        """Drop ``key``'s checkpoint (called after a successful persist)."""
+        with self._lock:
+            try:
+                os.remove(self._ckpt_path(key))
+            except FileNotFoundError:
+                pass
+
+    def has_checkpoint(self, key: str) -> bool:
+        """True while an interrupted discovery's checkpoint exists."""
+        return os.path.exists(self._ckpt_path(key))
+
     # ----------------------------------------------------------------- gc
     def gc(self, *, max_entries: int | None = None,
            max_age_s: float | None = None,
@@ -427,7 +552,11 @@ class TopologyStore:
         timestamp rank oldest, so damaged metadata cannot pin an entry
         forever).  Each eviction removes the topology document and its
         sample archive as one pair; orphaned sample archives (samples whose
-        topology is gone — e.g. after a quarantine) are swept as well.  The
+        topology is gone — e.g. after a quarantine) are swept as well.
+        Checkpoints are deliberately NOT swept as orphans: they exist
+        precisely for keys that have no topology yet (an interrupted
+        discovery awaiting resume); they are removed by ``delete`` /
+        ``clear_checkpoint``.  The
         whole sweep runs under the store's advisory write lock so a
         concurrent discovery cannot interleave a persist with the unlink
         pair.  Returns ``{"evicted": [keys...], "kept": n, "orphans": n}``.

@@ -1,0 +1,105 @@
+"""Shared fault-tolerance vocabulary for the probe and engine layers.
+
+``TransientRunnerError`` started life in ``serve/jobs.py`` as the job
+engine's retry trigger; promoting it here lets the *discovery engine*
+retry individual work items on the same taxonomy without the core layers
+importing from ``serve`` (the dependency arrow must point serve -> core,
+never back).  ``serve/jobs.py`` keeps a compat re-export.
+
+The module also defines the two small value types the resilience path is
+built from:
+
+* ``Resilience`` — the per-discovery fault-tolerance policy: how many
+  retries a work item gets, how backoff grows, whether exhausted items
+  degrade or abort, and the opt-in statistical hardening knobs (MAD
+  outlier gating, ambiguity-driven resampling) threaded into the K-S
+  adjudication path.
+* ``DegradedResult`` — the sentinel an exhausted work item leaves in the
+  engine results.  It ducks as "probe found nothing" (``found=False``)
+  through every downstream family, so dependents skip it instead of
+  crashing, and assembly maps it to an ``unknown`` attribute with
+  ``provenance="degraded"`` plus diagnostics.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+__all__ = ["TransientRunnerError", "Resilience", "DegradedResult"]
+
+
+class TransientRunnerError(Exception):
+    """A runner failure worth retrying: drift spikes, device contention,
+    a flaky interconnect — anything where re-running the same request has
+    a real chance of succeeding.  Deterministic errors must NOT subclass
+    this; the engine fails them on the first attempt."""
+
+
+@dataclass(frozen=True)
+class Resilience:
+    """Fault-tolerance policy for one discovery run.
+
+    Retry semantics (scheduler + fusion dispatcher): a work item that
+    raises ``TransientRunnerError`` is re-attempted up to ``max_retries``
+    times, sleeping ``min(backoff_cap_s, backoff_base_s * 2**attempt)``
+    between attempts (``backoff_base_s`` defaults to 0 so simulated runs
+    and tests never sleep).  When the budget is exhausted: if ``degrade``
+    is True the item lands as a ``DegradedResult`` and discovery
+    continues; otherwise the error propagates (the pre-resilience
+    behavior).
+
+    Statistical hardening (opt-in, default off — defaults preserve
+    bit-identical topologies): ``mad_k`` enables MAD-based outlier gating
+    of probe sample rows before K-S adjudication; ``resample_band`` and
+    ``resample_extra`` enable confidence-driven adaptive resampling —
+    when the K-S statistic lands within ``resample_band`` of the critical
+    value, ``resample_extra`` additional samples are drawn before the
+    verdict.  Only these knobs affect results, so only they fold into
+    the store request descriptor (``descriptor_entry``).
+    """
+
+    max_retries: int = 2
+    backoff_base_s: float = 0.0
+    backoff_cap_s: float = 2.0
+    degrade: bool = True
+    sleep: Callable[[float], None] = field(default=time.sleep, repr=False,
+                                           compare=False)
+    mad_k: float | None = None
+    resample_band: float = 0.0
+    resample_extra: int = 0
+
+    def backoff(self, attempt: int) -> float:
+        """Seconds to sleep before retry number ``attempt`` (0-based)."""
+        return min(self.backoff_cap_s, self.backoff_base_s * (2 ** attempt))
+
+    def descriptor_entry(self) -> dict | None:
+        """The result-affecting knobs as a descriptor fragment, or None.
+
+        Retry/backoff settings never change *what* a probe measures, only
+        whether it survives faults — so they stay out of the store key and
+        a resilient rerun of a clean request is a pure store hit.  The
+        statistical knobs do change the sample stream; when any is active
+        the fragment makes the request key distinct.
+        """
+        if self.mad_k is None and not self.resample_extra:
+            return None
+        return {"mad_k": self.mad_k, "resample_band": self.resample_band,
+                "resample_extra": self.resample_extra}
+
+
+@dataclass(frozen=True)
+class DegradedResult:
+    """What an attribute's slot holds after its probes exhausted retries.
+
+    ``found=False`` makes it duck-type as a no-result through dependent
+    probe families (they all check ``.found`` before consuming), and the
+    assembly layer turns it into an ``unknown`` attribute with
+    ``provenance="degraded"`` carrying ``error``/``attempts`` diagnostics.
+    """
+
+    family: str
+    key: str
+    error: str
+    attempts: int
+    found: bool = False

@@ -1,6 +1,7 @@
 """Microbenchmark probes (paper contribution C2)."""
 from .runners import (HostRunner, ProbeRunner, SimRunner, SpaceInfo,
                       random_cycle, sattolo_cycle)
+from .chaos import ChaosRunner, FaultSchedule
 from .pallas_runner import PallasRunner, make_pallas_model
 from .size import SizeResult, find_size
 from .latency import LatencyResult, measure_latency
@@ -14,6 +15,7 @@ from .bandwidth import (BandwidthResult, CollectiveEstimate, all_to_all_time,
 from .adjacency import AdjacencyResult, SimPod, find_link_adjacency
 
 __all__ = [
+    "ChaosRunner", "FaultSchedule",
     "HostRunner", "PallasRunner", "ProbeRunner", "SimRunner", "SpaceInfo",
     "make_pallas_model", "random_cycle", "sattolo_cycle",
     "SizeResult", "find_size", "LatencyResult", "measure_latency",

@@ -32,7 +32,7 @@ from typing import Callable
 import numpy as np
 
 from ..stats import (cusum_change_point, geometric_reduction, ks_2samp,
-                     ks_change_point_scan, winsorize)
+                     ks_change_point_scan, mad_gate, winsorize)
 from ..stats.ks import ks_critical_value
 
 __all__ = ["SizeResult", "find_size", "sweep_rows", "descend_first_shifted",
@@ -98,15 +98,20 @@ class ShiftClassifier:
     """
 
     def __init__(self, base: np.ndarray, alpha: float,
-                 min_jump: float = 0.5):
+                 min_jump: float = 0.5, *, mad_k: float | None = None,
+                 resample_band: float = 0.0):
         self.base = np.asarray(base, dtype=np.float64).ravel()
+        if mad_k is not None:
+            self.base = mad_gate(self.base, mad_k)
         self.alpha = alpha
+        self.mad_k = mad_k
+        self.resample_band = resample_band
         self._sorted = np.sort(self.base)
         self._jump_med = _fast_median(self.base) * (1.0 + min_jump)
         self._crit: dict[int, float] = {}
 
-    def shifted(self, cur: np.ndarray) -> bool:
-        cur = np.asarray(cur, dtype=np.float64).ravel()
+    def _departure(self, cur: np.ndarray) -> tuple[float, float]:
+        """(K-S D, critical value) of ``cur`` against the baseline."""
         b = np.sort(cur)
         n, m = self._sorted.size, b.size
         pooled = np.concatenate([self._sorted, b])
@@ -116,6 +121,31 @@ class ShiftClassifier:
         crit = self._crit.get(m)
         if crit is None:
             crit = self._crit[m] = ks_critical_value(n, m, self.alpha)
+        return d, crit
+
+    def shifted(self, cur: np.ndarray, resample=None) -> bool:
+        """Classify one row; defaults are bit-identical to the historical
+        decision (no gating, no resampling).
+
+        With ``mad_k`` set (resilience hardening), both sides are MAD-gated
+        before the test so an injected outlier spike cannot fake or mask a
+        boundary.  With ``resample`` (a zero-arg callable drawing extra
+        samples) and a positive ``resample_band``, an *ambiguous* verdict —
+        K-S D within the band of the critical value — triggers one
+        confidence-driven resample: the extra rows concatenate onto ``cur``
+        and the larger-sample test decides.
+        """
+        cur = np.asarray(cur, dtype=np.float64).ravel()
+        if self.mad_k is not None:
+            cur = mad_gate(cur, self.mad_k)
+        d, crit = self._departure(cur)
+        if (resample is not None and self.resample_band > 0.0
+                and abs(d - crit) <= self.resample_band):
+            extra = np.asarray(resample(), dtype=np.float64).ravel()
+            if self.mad_k is not None:
+                extra = mad_gate(extra, self.mad_k)
+            cur = np.concatenate([cur, extra])
+            d, crit = self._departure(cur)
         if d <= crit:
             return False
         return _fast_median(cur) > self._jump_med
@@ -343,6 +373,7 @@ def find_size(
     max_bytes: int | None = None,
     batched: bool = False,
     budget=None,
+    robust=None,
 ) -> SizeResult:
     """Run the full §IV-B workflow against ``runner``/``space``.
 
@@ -356,6 +387,14 @@ def find_size(
     deterministic classification descent over the grid — cutting probed
     rows ~4-8x while returning the identical discrete size (the dense sweep
     stays available as the equivalence oracle behind ``budget=None``).
+
+    ``robust`` (an ``errors.Resilience``) opts the *dense* path into the
+    statistical hardening knobs: MAD outlier gating of every classified
+    row, and confidence-driven resampling of grid rows whose K-S verdict is
+    ambiguous (extra samples drawn under a distinct request key).  The
+    planner path ignores ``robust`` — its row-sharing identity guarantees
+    are calibrated against the unhardened classifier.  Defaults (all knobs
+    off) are bit-identical to the historical behavior.
     """
     if budget is not None:
         from ..engine.planner import find_size_planned
@@ -367,9 +406,14 @@ def find_size(
                                  max_bytes=max_bytes)
     max_bytes = max_bytes or 64 * 1024 * KIB
 
+    mad_k = getattr(robust, "mad_k", None)
+    resample_band = getattr(robust, "resample_band", 0.0)
+    resample_extra = getattr(robust, "resample_extra", 0)
+
     # -- (1a) exponential doubling until the distribution departs from baseline
     base = runner.pchase(space, lo, step, n_samples)
-    clf = ShiftClassifier(base, alpha, classification_jump(runner))
+    clf = ShiftClassifier(base, alpha, classification_jump(runner),
+                          mad_k=mad_k, resample_band=resample_band)
     size = lo
     first_bad = None
     ladder: list[int] = []
@@ -405,7 +449,15 @@ def find_size(
 
         def classify(i: int) -> bool:
             if i not in memo:
-                memo[i] = clf.shifted(rows[i])
+                resample = None
+                if resample_extra:
+                    # A distinct n_samples keys an independent sample
+                    # stream on request-keyed runners — genuinely new
+                    # evidence, not a replay of the ambiguous row.
+                    resample = (lambda s=int(sizes[i]):
+                                runner.pchase(space, s, step,
+                                              int(resample_extra)))
+                memo[i] = clf.shifted(rows[i], resample=resample)
             return memo[i]
 
         flip = descend_first_shifted(classify, sizes.size)

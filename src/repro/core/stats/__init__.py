@@ -2,7 +2,8 @@
 from .ks import KSResult, ks_2samp, ks_critical_value, ks_pvalue, ks_statistic
 from .reduction import geometric_reduction, reduce_rows
 from .cpd import ChangePoint, cusum_change_point, ks_change_point, pelt_segments
-from .outliers import OutlierReport, boundary_suspect, detect_outliers, winsorize
+from .outliers import (OutlierReport, boundary_suspect, detect_outliers,
+                       mad_gate, winsorize)
 from .batch import (classify_miss_rows, ks_2samp_rows, ks_change_point_scan,
                     ks_scan, ks_statistic_rows)
 
@@ -10,7 +11,8 @@ __all__ = [
     "KSResult", "ks_2samp", "ks_critical_value", "ks_pvalue", "ks_statistic",
     "geometric_reduction", "reduce_rows",
     "ChangePoint", "cusum_change_point", "ks_change_point", "pelt_segments",
-    "OutlierReport", "boundary_suspect", "detect_outliers", "winsorize",
+    "OutlierReport", "boundary_suspect", "detect_outliers", "mad_gate",
+    "winsorize",
     "classify_miss_rows", "ks_2samp_rows", "ks_change_point_scan", "ks_scan",
     "ks_statistic_rows",
 ]

@@ -11,7 +11,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-__all__ = ["OutlierReport", "detect_outliers", "boundary_suspect", "winsorize"]
+__all__ = ["OutlierReport", "detect_outliers", "boundary_suspect", "winsorize",
+           "mad_gate"]
 
 
 @dataclass(frozen=True)
@@ -58,3 +59,26 @@ def winsorize(series: np.ndarray, pct: float = 1.0) -> np.ndarray:
     s = np.asarray(series, dtype=np.float64).ravel()
     lo, hi = np.percentile(s, [pct, 100.0 - pct])
     return np.clip(s, lo, hi)
+
+
+def mad_gate(series: np.ndarray, k: float = 5.0) -> np.ndarray:
+    """Drop samples beyond ``k`` robust standard deviations from the median
+    (MAD scaled by 1.4826), the resilience layer's pre-adjudication gate
+    against chaos-style outlier spikes.
+
+    Unlike ``winsorize`` this *removes* rows instead of clamping, so a
+    single 8x throttle spike cannot drag a K-S verdict; the series is
+    returned unchanged when it is too short to judge (< 4), when the MAD is
+    zero (constant samples), or when the gate would drop everything.
+    """
+    s = np.asarray(series, dtype=np.float64).ravel()
+    if s.size < 4:
+        return s
+    med = np.median(s)
+    mad = np.median(np.abs(s - med))
+    if mad <= 0:
+        return s
+    keep = np.abs(s - med) <= k * 1.4826 * mad
+    if not np.any(keep):
+        return s
+    return s[keep]

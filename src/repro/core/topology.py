@@ -20,11 +20,15 @@ __all__ = [
     "Attribute", "MemoryElement", "ComputeElement", "Link", "Topology",
     "topology_equivalent",
     "PROVENANCE_API", "PROVENANCE_BENCHMARK", "PROVENANCE_CATALOG",
+    "PROVENANCE_DEGRADED",
 ]
 
 PROVENANCE_API = "api"
 PROVENANCE_BENCHMARK = "benchmark"
 PROVENANCE_CATALOG = "catalog"
+# An attribute whose probes exhausted the retry budget: value is "unknown",
+# diagnostics ride in the element notes, discovery completes anyway.
+PROVENANCE_DEGRADED = "degraded"
 
 
 def _plain(value: Any) -> Any:

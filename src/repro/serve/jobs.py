@@ -63,11 +63,10 @@ JOB_LATENCY_BUCKETS_S = (0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
                          5.0, 10.0, 30.0, 120.0)
 
 
-class TransientRunnerError(Exception):
-    """A runner failure worth retrying: drift spikes, device contention,
-    a flaky interconnect — anything where re-running the same request has
-    a real chance of succeeding.  Deterministic errors must NOT subclass
-    this; the engine fails them on the first attempt."""
+# Promoted to core.errors (ISSUE 9) so the probe/engine layers can share
+# the retry taxonomy without importing from serve; re-exported here for
+# compatibility with existing callers.
+from ..core.errors import TransientRunnerError  # noqa: E402  (compat)
 
 
 class QueueFullError(Exception):

@@ -16,8 +16,10 @@ import pytest
 
 from repro.core import make_h100_like
 from repro.core.engine.registry import space_probe_specs
-from repro.core.probes import (HostRunner, PallasRunner, ProbeRunner,
-                               SimRunner, make_pallas_model, random_cycle,
+from repro.core.errors import TransientRunnerError
+from repro.core.probes import (ChaosRunner, FaultSchedule, HostRunner,
+                               PallasRunner, ProbeRunner, SimRunner,
+                               make_pallas_model, random_cycle,
                                sattolo_cycle)
 
 KIB, MIB = 1024, 1024**2
@@ -25,10 +27,20 @@ KIB, MIB = 1024, 1024**2
 # Per backend: runner factory, a bandwidth-capable space, and whether
 # cold-pass requests on unsupported spaces must raise (the measuring
 # backends have no cold-pass control at all / outside cache spaces; the
-# simulator can serve them even where discovery never asks).
+# simulator can serve them even where discovery never asks).  The "chaos"
+# row is a ``ChaosRunner`` under a zero-fault schedule: the fault-injection
+# proxy must itself be a conforming ``ProbeRunner`` (same shapes, same
+# batch==loop contract) or every fault-tolerance result built on it would
+# be suspect.
 BACKENDS = {
     "sim": dict(
         make=lambda: SimRunner(make_h100_like(seed=3)),
+        bw_space="L2",
+        cold_unsupported_raises=False,
+    ),
+    "chaos": dict(
+        make=lambda: ChaosRunner(SimRunner(make_h100_like(seed=3)),
+                                 FaultSchedule(seed=1)),
         bw_space="L2",
         cold_unsupported_raises=False,
     ),
@@ -47,6 +59,7 @@ BACKENDS = {
 
 PARAMS = [
     pytest.param("sim", id="sim"),
+    pytest.param("chaos", id="chaos"),
     pytest.param("host", id="host"),
     pytest.param("pallas", id="pallas", marks=pytest.mark.slow),
 ]
@@ -69,9 +82,11 @@ class TestProtocolSurface:
         assert isinstance(backend["runner"], ProbeRunner)
 
     def test_declares_determinism(self, backend):
+        # chaos over sim under a value-preserving schedule is still
+        # deterministic: replayed faults, unperturbed samples.
         det = backend["runner"].deterministic
         assert isinstance(det, bool)
-        assert det == (backend["name"] == "sim")
+        assert det == (backend["name"] in ("sim", "chaos"))
 
     def test_spaces_well_formed(self, backend):
         infos = backend["runner"].spaces()
@@ -265,6 +280,105 @@ class TestEvictionMany:
         a = reqs[0]
         runner.amount_probe(a[1], a[2], a[3], a[4], 7)
         assert runner.cache.stats()["misses"] == len(reqs)
+
+
+class TestChaosRunner:
+    """Chaos-specific halves of the contract: transparent when idle,
+    deterministic when faulting (the property every fault-tolerance test
+    and the ``fault_recovery`` bench gate lean on)."""
+
+    def _base(self):
+        return SimRunner(make_h100_like(seed=3))
+
+    def test_zero_fault_schedule_is_bit_transparent(self):
+        """No schedule -> every sample identical to the wrapped runner."""
+        chaos, base = ChaosRunner(self._base()), self._base()
+        info = base.spaces()[0]
+        ab = min(info.max_bytes // 8, 64 * KIB)
+        assert np.array_equal(chaos.pchase(info.name, ab, 32, 9),
+                              base.pchase(info.name, ab, 32, 9))
+        assert np.array_equal(
+            np.asarray(chaos.pchase_batch(info.name, [ab, 2 * ab], 32, 9)),
+            np.asarray(base.pchase_batch(info.name, [ab, 2 * ab], 32, 9)))
+        assert chaos.faults_injected == 0
+
+    def test_fault_replay_is_deterministic(self):
+        """Two fresh runners over the same schedule fault on exactly the
+        same calls — chaos runs are reproducible by construction."""
+        sched = FaultSchedule(seed=42, transient_rate=0.3,
+                              max_faults_per_request=2)
+
+        def trace():
+            chaos = ChaosRunner(self._base(), sched)
+            info = chaos.spaces()[0]
+            ab = min(info.max_bytes // 8, 64 * KIB)
+            events = []
+            for size in (ab, 2 * ab, 3 * ab):
+                for _ in range(4):             # retries consume the budget
+                    try:
+                        chaos.pchase(info.name, size, 32, 9)
+                        events.append(("ok", size))
+                    except TransientRunnerError:
+                        events.append(("fault", size))
+            return events, chaos.faults_injected
+
+        assert trace() == trace()
+
+    def test_fault_budget_lets_retries_succeed(self):
+        """Per-request fault budget: after ``max_faults_per_request``
+        raises, the same request must succeed — retry loops terminate."""
+        sched = FaultSchedule(seed=0, transient_rate=1.0,
+                              max_faults_per_request=2)
+        chaos = ChaosRunner(self._base(), sched)
+        info = chaos.spaces()[0]
+        ab = min(info.max_bytes // 8, 64 * KIB)
+        for _ in range(2):
+            with pytest.raises(TransientRunnerError):
+                chaos.pchase(info.name, ab, 32, 9)
+        out = np.asarray(chaos.pchase(info.name, ab, 32, 9))
+        assert out.shape == (9,)
+        assert chaos.faults_injected == 2
+
+    def test_jitter_preserves_batch_equals_loop(self):
+        """Perturbations are keyed by the per-row request signature, so a
+        fused row and its single-call twin see the same noise — the
+        batch==loop equivalence the engine's caching depends on."""
+        sched = FaultSchedule(seed=9, jitter=0.05, outlier_rate=0.05)
+        chaos = ChaosRunner(self._base(), sched)
+        info = chaos.spaces()[0]
+        ab = min(info.max_bytes // 8, 64 * KIB)
+        sizes = [ab, 2 * ab, 3 * ab]
+        batch = np.asarray(chaos.pchase_batch(info.name, sizes, 32, 9))
+        for i, size in enumerate(sizes):
+            assert np.array_equal(batch[i],
+                                  np.asarray(chaos.pchase(info.name, size,
+                                                          32, 9)))
+        # ...and the jitter is actually doing something vs the base
+        base = self._base()
+        assert not np.array_equal(batch[0],
+                                  np.asarray(base.pchase(info.name, ab, 32,
+                                                         9)))
+
+    def test_permanent_kind_always_faults(self):
+        sched = FaultSchedule(seed=3, permanent_kinds=("bandwidth",))
+        chaos = ChaosRunner(self._base(), sched)
+        for _ in range(4):
+            with pytest.raises(TransientRunnerError):
+                chaos.bandwidth("L2", "read")
+        # other kinds stay clean
+        info = chaos.spaces()[0]
+        ab = min(info.max_bytes // 8, 64 * KIB)
+        assert np.asarray(chaos.pchase(info.name, ab, 32, 9)).shape == (9,)
+
+    def test_kill_after_terminates_run(self):
+        sched = FaultSchedule(seed=3, kill_after=2)
+        chaos = ChaosRunner(self._base(), sched)
+        info = chaos.spaces()[0]
+        ab = min(info.max_bytes // 8, 64 * KIB)
+        chaos.pchase(info.name, ab, 32, 9)
+        chaos.pchase(info.name, 2 * ab, 32, 9)
+        with pytest.raises(RuntimeError, match="chaos kill"):
+            chaos.pchase(info.name, 3 * ab, 32, 9)
 
 
 class TestBandwidth:

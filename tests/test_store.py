@@ -449,3 +449,152 @@ class TestGenerations:
     def test_unknown_key_is_neither_present_nor_quarantined(self, store):
         assert store.generation("never-stored") is None
         assert not store.is_quarantined("never-stored")
+
+
+class TestLockfileFallbackStaleBreak:
+    """ISSUE 9 satellite: the non-fcntl lockfile fallback must break stale
+    locks only when the recorded holder pid is verifiably dead — age alone
+    never justifies unlinking another process's live lock, and a fresh
+    lockfile is never touched regardless of its pid."""
+
+    @pytest.fixture
+    def fallback_lock(self, tmp_path, monkeypatch):
+        """A StoreLock forced onto the exclusive-create lockfile path."""
+        import repro.core.engine.store as store_module
+        monkeypatch.setattr(store_module, "fcntl", None)
+        return store_module.StoreLock(
+            str(tmp_path / ".lock"), timeout=0.4, poll=0.01,
+            stale_seconds=5.0)
+
+    @staticmethod
+    def _dead_pid():
+        """A pid guaranteed to belong to no running process (reaped child)."""
+        import subprocess
+        import sys
+        p = subprocess.Popen([sys.executable, "-c", "pass"])
+        p.wait()
+        return p.pid
+
+    @staticmethod
+    def _plant(path, content, *, age_s=0.0):
+        with open(path, "w") as f:
+            f.write(content)
+        if age_s:
+            import time as _time
+            old = _time.time() - age_s
+            os.utime(path, (old, old))
+
+    def test_dead_holder_stale_lock_is_broken(self, fallback_lock):
+        self._plant(fallback_lock.path, str(self._dead_pid()), age_s=1000.0)
+        fallback_lock.acquire()                 # breaks + acquires, no timeout
+        try:
+            assert fallback_lock.held
+            with open(fallback_lock.path) as f:
+                assert int(f.read()) == os.getpid()
+        finally:
+            fallback_lock.release()
+        assert not os.path.exists(fallback_lock.path)
+
+    def test_live_holder_never_broken_regardless_of_age(self, fallback_lock):
+        """The documented race fix: a decade-old lockfile whose holder is
+        alive (a long critical section, not a crash) must never be broken."""
+        self._plant(fallback_lock.path, str(os.getpid()), age_s=1_000_000.0)
+        with pytest.raises(TimeoutError, match="store lock busy"):
+            fallback_lock.acquire()
+        assert os.path.exists(fallback_lock.path)   # lock left intact
+        with open(fallback_lock.path) as f:
+            assert int(f.read()) == os.getpid()
+
+    def test_fresh_lock_not_broken_even_with_dead_pid(self, fallback_lock):
+        """Age gates before liveness: a just-created lock (holder may not
+        have written its pid yet, or pid was recycled) is left alone."""
+        self._plant(fallback_lock.path, str(self._dead_pid()))
+        with pytest.raises(TimeoutError, match="store lock busy"):
+            fallback_lock.acquire()
+        assert os.path.exists(fallback_lock.path)
+
+    def test_unreadable_pid_is_treated_as_dead_once_stale(self, fallback_lock):
+        self._plant(fallback_lock.path, "not-a-pid", age_s=1000.0)
+        fallback_lock.acquire()
+        fallback_lock.release()
+        assert not os.path.exists(fallback_lock.path)
+
+    def test_fallback_mutual_exclusion_and_release(self, fallback_lock):
+        """Sanity: the fallback still excludes a second holder and the
+        release unlinks so the next acquire is immediate."""
+        import repro.core.engine.store as store_module
+        other = store_module.StoreLock(fallback_lock.path, timeout=0.2,
+                                       poll=0.01)
+        fallback_lock.acquire()
+        try:
+            assert store_module.fcntl is None
+            with pytest.raises(TimeoutError):
+                other.acquire()
+        finally:
+            fallback_lock.release()
+        other.acquire()                         # immediate after release
+        other.release()
+
+
+class TestCheckpointAPI:
+    """ISSUE 9: checkpoint persistence for interrupted discoveries —
+    put/load/clear round-trip, corruption quarantine, and lifecycle ties
+    to delete/gc."""
+
+    ENTRIES = {
+        ("pchase", "L1", 4096, 32, 9): np.arange(9, dtype=np.float64),
+        ("cold", "L2", 1 << 20, 64, 9): np.full(9, 3.5),
+    }
+    FAMILIES = [("L1", "size"), ("L1", "latency"), "<device>/sharing"]
+
+    def test_roundtrip_bit_equal(self, store):
+        assert not store.has_checkpoint("k1")
+        store.put_checkpoint("k1", self.ENTRIES, self.FAMILIES)
+        assert store.has_checkpoint("k1")
+        entries, families = store.load_checkpoint("k1")
+        assert set(entries) == set(self.ENTRIES)
+        for k, arr in self.ENTRIES.items():
+            np.testing.assert_array_equal(entries[k], arr)
+        assert families == [("L1", "size"), ("L1", "latency"),
+                            "<device>/sharing"]
+
+    def test_missing_checkpoint_is_none(self, store):
+        assert store.load_checkpoint("nope") is None
+        assert not store.has_checkpoint("nope")
+
+    def test_clear_checkpoint(self, store):
+        store.put_checkpoint("k2", self.ENTRIES)
+        store.clear_checkpoint("k2")
+        assert not store.has_checkpoint("k2")
+        store.clear_checkpoint("k2")            # idempotent on a missing file
+
+    def test_corrupted_checkpoint_quarantined_to_miss(self, store):
+        """A damaged checkpoint degrades to a from-scratch run — load
+        returns None and the file is quarantined, never raised."""
+        store.put_checkpoint("k3", self.ENTRIES)
+        with open(store._ckpt_path("k3"), "wb") as f:
+            f.write(b"\x00\x01 definitely not an npz")
+        assert store.load_checkpoint("k3") is None
+        assert not store.has_checkpoint("k3")   # quarantine moved it aside
+        assert os.listdir(os.path.join(store.root, "corrupt"))
+
+    def test_delete_removes_checkpoint(self, store):
+        topo, _ = discover_sim(make_h100_like(seed=61), n_samples=9)
+        store.put("k4", topo)
+        store.put_checkpoint("k4", self.ENTRIES)
+        store.delete("k4")
+        assert store.get("k4") is None
+        assert not store.has_checkpoint("k4")
+
+    def test_gc_never_sweeps_checkpoints(self, store):
+        """Checkpoints exist precisely for keys with no topology yet (an
+        interrupted discovery awaiting resume); an aggressive gc must not
+        treat them as orphans."""
+        topo, _ = discover_sim(make_h100_like(seed=61), n_samples=9)
+        store.put("old", topo)
+        store.put_checkpoint("in-progress", self.ENTRIES)
+        out = store.gc(max_entries=0)
+        assert out["evicted"] == ["old"]
+        assert store.has_checkpoint("in-progress")
+        entries, _ = store.load_checkpoint("in-progress")
+        assert set(entries) == set(self.ENTRIES)
