@@ -45,7 +45,7 @@ bench:
 bench-gate:
 	$(PY) benchmarks/check_regression.py --self-test
 	$(ENV) $(PY) benchmarks/run.py --json \
-		--only engine_speedup,adaptive_speedup,topology_query,pallas_interp,topology_http,remote_discovery,fault_recovery \
+		--only engine_speedup,adaptive_speedup,topology_query,pallas_interp,topology_http,remote_discovery,fault_recovery,parallel_speedup \
 		--out bench_current.json
 	$(PY) benchmarks/check_regression.py bench_current.json BENCH_BASELINE.json
 

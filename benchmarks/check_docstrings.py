@@ -46,6 +46,7 @@ STRICT_FILES = (
     "src/repro/core/errors.py",
     "src/repro/core/probes/chaos.py",
     "src/repro/core/engine/engine.py",
+    "src/repro/core/engine/parallel.py",
     "src/repro/core/engine/planner.py",
     "src/repro/core/engine/fusion.py",
     "src/repro/kernels/pchase_probe.py",

@@ -85,6 +85,15 @@ GATES: dict[str, dict] = {
         "costs": ("kernel_calls",),
         "cost_ceilings": {"kernel_calls": 500.0},
     },
+    # ISSUE 10 tentpole row: multiprocess sharding of the batched probe
+    # calls.  ``identical`` is the entire correctness claim — pooled and
+    # inline runs must produce byte-for-byte equal sample matrices
+    # (request-keyed sampling makes row placement invisible).  ``speedup``
+    # warns only: it measures the CI box's core count, not the design.
+    "parallel_speedup": {
+        "bools": ("identical",),
+        "warn_metrics": ("speedup",),
+    },
     # ISSUE 9 tentpole row: fault-tolerant discovery.  Clean-vs-faulted
     # topology equivalence, graceful degradation, and zero-recompute
     # checkpoint resume are all correctness (hard-gated); the
@@ -262,6 +271,9 @@ def self_test() -> int:
         {"name": "fault_recovery", "us": 70000.0,
          "derived": "equivalent=True_degraded_ok=True_resume_ok=True_"
                      "retry_overhead=1.10_ok=True"},
+        {"name": "parallel_speedup", "us": 90000.0,
+         "derived": "inline=180000us_speedup=2.00x_workers=4_rows=512_"
+                     "identical=True"},
     ]
     clean = [
         {"name": "engine_speedup", "us": 170000.0,
@@ -284,6 +296,9 @@ def self_test() -> int:
         {"name": "fault_recovery", "us": 82000.0,      # slower wall: warn only
          "derived": "equivalent=True_degraded_ok=True_resume_ok=True_"
                      "retry_overhead=1.15_ok=True"},
+        {"name": "parallel_speedup", "us": 210000.0,   # 1-core box: warn only
+         "derived": "inline=175000us_speedup=0.83x_workers=2_rows=512_"
+                     "identical=True"},
     ]
     speed_regressed = json.loads(json.dumps(clean))
     speed_regressed[0]["derived"] = \
@@ -329,6 +344,12 @@ def self_test() -> int:
     retry_runaway = json.loads(json.dumps(clean))
     retry_runaway[6]["derived"] = retry_runaway[6]["derived"] \
         .replace("retry_overhead=1.15", "retry_overhead=3.40")  # over ceiling
+    parallel_broken = json.loads(json.dumps(clean))
+    parallel_broken[7]["derived"] = parallel_broken[7]["derived"] \
+        .replace("identical=True", "identical=False")
+    parallel_slow = json.loads(json.dumps(clean))
+    parallel_slow[7]["derived"] = parallel_slow[7]["derived"] \
+        .replace("speedup=0.83x", "speedup=0.30x")     # wall-only: warn
 
     checks = [
         ("clean run passes", compare(clean, baseline).ok, True),
@@ -360,6 +381,10 @@ def self_test() -> int:
          compare(recovery_broken, baseline).ok, False),
         ("runaway retry overhead fails",
          compare(retry_runaway, baseline).ok, False),
+        ("pooled-vs-inline identity flip fails",
+         compare(parallel_broken, baseline).ok, False),
+        ("pooled speedup drop only warns",
+         compare(parallel_slow, baseline).ok, True),
     ]
     bad = [label for label, got, want in checks if got != want]
     for label, got, want in checks:

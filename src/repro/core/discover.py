@@ -481,6 +481,13 @@ class DiscoveryRequest:
     # this); retry knobs deliberately are not (they never change what a
     # clean run measures).
     resilience: object | None = None
+    # Multiprocess probe execution (engine/parallel.ParallelConfig): shard
+    # the batched capability calls across the persistent worker-process
+    # pool.  Deliberately EXCLUDED from the request descriptor — pooled
+    # and inline runs are bit-identical (request-keyed sampling), so they
+    # must share a content address.  Runners without a RunnerSpec (and
+    # boxes under the effective-core floor) silently stay inline.
+    parallel: object | None = None
     # Fleet survey mode: instead of a full discovery, verify a stored
     # sibling topology (same vendor/model/backend, full provenance) with a
     # planned spot-check subset of probe rows and write it through under
@@ -569,7 +576,7 @@ def discover(request: DiscoveryRequest, *, store=None, refresh: bool = False,
                          max_workers=request.max_workers, timings=timings,
                          cache=cache, budget=request.budget,
                          fuse=request.fuse, resilience=request.resilience,
-                         checkpoint=checkpoint)
+                         checkpoint=checkpoint, parallel=request.parallel)
         timings.meta["cache"] = eng.cache_stats
         timings.meta["planned"] = request.budget is not None
         if eng.degraded or eng.retries:
@@ -578,12 +585,16 @@ def discover(request: DiscoveryRequest, *, store=None, refresh: bool = False,
                 "degraded": [d.key for d in eng.degraded]}
         topo = _assemble_engine_topology(request, runner, eng, timings)
     else:
-        cached = CachingRunner(runner, cache=cache)
+        from .engine.parallel import maybe_parallel_runner
+
+        cached = CachingRunner(
+            maybe_parallel_runner(runner, request.parallel), cache=cache)
         sched = run_work_items(request.plan(cached),
                                max_workers=request.max_workers,
                                timings=timings,
                                resilience=request.resilience,
-                               on_item_done=checkpoint)
+                               on_item_done=checkpoint,
+                               parallel=request.parallel)
         timings.meta["cache"] = cached.cache.stats()
         topo = request.assemble(sched, timings)
 
@@ -775,7 +786,7 @@ def discover_sim(device, n_samples: int = 33,
                  engine: bool = True, max_workers: int | None = None,
                  store=None, refresh: bool = False, budget=None,
                  fuse: bool = False, gc_policy=None, survey: bool = False,
-                 resilience=None,
+                 resilience=None, parallel=None,
                  ) -> tuple[Topology, DiscoveryTimings]:
     """Full MT4G-style discovery of a simulated device.
 
@@ -801,6 +812,11 @@ def discover_sim(device, n_samples: int = 33,
     the budget degrade to ``"unknown"`` attributes instead of aborting,
     and — with a ``store`` — the run checkpoints after every completed
     work item so an interrupted discovery resumes without re-probing.
+
+    ``parallel`` (an ``engine.parallel.ParallelConfig``) shards batched
+    probe calls across the persistent worker-process pool — bit-identical
+    results (request-keyed sampling), so it shares the inline run's store
+    key; it is pure wall-clock, like ``fuse``.
     """
     descriptor = sim_request_descriptor(device, n_samples, elements, budget,
                                         survey=survey, resilience=resilience)
@@ -835,6 +851,7 @@ def discover_sim(device, n_samples: int = 33,
         max_workers=max_workers,
         preload_samples=True,           # request-keyed streams: sound
         budget=budget, fuse=fuse, survey=survey, resilience=resilience,
+        parallel=parallel,
     )
     return discover(request, store=store, refresh=refresh,
                     gc_policy=gc_policy)
@@ -849,6 +866,7 @@ def discover_pallas(model=None, n_samples: int = 9,
                     store=None, refresh: bool = False,
                     budget=_DEFAULT_BUDGET, fuse: bool = True,
                     gc_policy=None, survey: bool = False, resilience=None,
+                    parallel=None,
                     ) -> tuple[Topology, DiscoveryTimings]:
     """Discovery through the real Pallas probe kernels (third backend).
 
@@ -900,6 +918,10 @@ def discover_pallas(model=None, n_samples: int = 9,
         clock_domain="interp-cycles",   # chain-length units, timed end-to-end
         preload_samples=False,          # real measurements: always re-measure
         budget=budget, fuse=fuse, survey=survey, resilience=resilience,
+        # PallasRunner publishes no RunnerSpec (compiled kernels don't
+        # round-trip a pickle), so pooling degrades to inline — the config
+        # is accepted for interface symmetry with the other backends.
+        parallel=parallel,
     )
     return discover(request, store=store, refresh=refresh,
                     gc_policy=gc_policy)
@@ -910,7 +932,8 @@ def discover_pallas(model=None, n_samples: int = 9,
 # --------------------------------------------------------------------------
 def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
                   quick: bool = True, *, store=None, refresh: bool = False,
-                  gc_policy=None) -> tuple[Topology, DiscoveryTimings]:
+                  gc_policy=None, parallel=None
+                  ) -> tuple[Topology, DiscoveryTimings]:
     """Live discovery of this machine's CPU hierarchy (real measurements).
 
     The host hierarchy has one probeable space, so instead of the registry
@@ -979,7 +1002,7 @@ def discover_host(max_bytes: int = 128 * 1024**2, n_samples: int = 9,
         # value here is the shared orchestration, not parallelism.
         max_workers=1,
         preload_samples=False,          # real measurements: always re-measure
-        plan=plan, assemble=assemble,
+        plan=plan, assemble=assemble, parallel=parallel,
     )
     return discover(request, store=store, refresh=refresh,
                     gc_policy=gc_policy)

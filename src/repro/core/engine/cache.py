@@ -62,19 +62,41 @@ class SampleCache:
 
     # --------------------------------------------------------- persistence
     def snapshot(self) -> dict[tuple, np.ndarray]:
-        """Copy of all entries (for ``TopologyStore.put_samples``)."""
+        """All entries as *read-only views* (``TopologyStore.put_samples``).
+
+        Copy-on-write contract: no sample matrix is duplicated here — the
+        snapshot shares the cache's buffers, which is safe because cache
+        writers replace references (never mutate arrays in place) and the
+        views are frozen (``writeable=False``).  A consumer that needs a
+        mutable matrix copies its own row; serialization (checkpoint and
+        store write-through, the hot callers — the checkpoint hook fires
+        after *every* work item) reads without doubling resident memory.
+        """
         with self._lock:
-            return dict(self._store)
+            return {k: self._frozen_view(v) for k, v in self._store.items()}
 
     def preload(self, entries: dict) -> None:
         """Seed the cache from persisted entries (``load_samples``).
 
-        Preloaded rows count as neither hits nor misses at load time; the
-        probes that later read them register as ordinary hits.
+        Entries are shared as read-only views, not copied: resume and
+        store-hit paths preload the full persisted sample set, and a deep
+        copy here doubled resident sample memory for the whole run.  The
+        probes treat served rows as read-only already; the frozen view
+        turns any violation into a loud ``ValueError`` instead of silent
+        cross-run corruption.  Preloaded rows count as neither hits nor
+        misses at load time; the probes that later read them register as
+        ordinary hits.
         """
         with self._lock:
             for k, v in entries.items():
-                self._store.setdefault(tuple(k), np.asarray(v))
+                self._store.setdefault(tuple(k), self._frozen_view(v))
+
+    @staticmethod
+    def _frozen_view(value) -> np.ndarray:
+        """A non-owning read-only view of ``value`` (zero-copy for arrays)."""
+        view = np.asarray(value).view()
+        view.flags.writeable = False
+        return view
 
 
 class CachingRunner:
@@ -340,3 +362,13 @@ class CachingRunner:
         """Whether repeated requests return bit-identical samples (the
         base runner's contract — caching doesn't change it)."""
         return getattr(self.base, "deterministic", False)
+
+    def runner_spec(self):
+        """The *base* runner's rebuild spec (``engine.parallel``), or None.
+
+        The sample cache itself stays on the coordinator — pool workers
+        only ever see cache-missing rows — so the worker-side rebuild is
+        the bare runner, not another caching layer.
+        """
+        fn = getattr(self.base, "runner_spec", None)
+        return fn() if fn is not None else None

@@ -44,7 +44,7 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
                max_workers: int | None = None, timings=None,
                cache: SampleCache | None = None, budget=None,
                fuse: bool = False, resilience=None,
-               checkpoint=None) -> EngineResult:
+               checkpoint=None, parallel=None) -> EngineResult:
     """Run the full registry against ``runner`` through the engine.
 
     ``device_families`` selects which device-scoped families to schedule
@@ -65,7 +65,19 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
     policy's statistical knobs thread into the probe context.
     ``checkpoint(key)`` fires after every completed work item — the
     discovery layer's sample-cache write-through hook.
+
+    ``parallel`` (an ``engine.parallel.ParallelConfig``) shards the
+    batched capability calls across the persistent worker-process pool:
+    the runner is wrapped in a ``ParallelRunner`` *below* the caching
+    layer, so cached rows are served locally and only cache-missing rows
+    cross the process boundary.  Runners without a ``RunnerSpec`` — or
+    boxes below the config's effective-core floor — silently stay inline;
+    results are bit-identical either way for deterministic runners.
     """
+    if parallel is not None:
+        from .parallel import maybe_parallel_runner
+
+        runner = maybe_parallel_runner(runner, parallel)
     cached = CachingRunner(runner, cache=cache)
     dispatcher = None
     probe_runner = cached
@@ -145,7 +157,7 @@ def run_probes(runner, n_samples: int = 33, elements: list[str] | None = None,
     sched = run_work_items(items, max_workers=max_workers, timings=timings,
                            fuser=dispatcher, resilience=resilience,
                            on_exhausted=on_exhausted if resilience else None,
-                           on_item_done=checkpoint)
+                           on_item_done=checkpoint, parallel=parallel)
 
     device_results = {fam: sched.results[(DEVICE_KEY, fam)]
                       for fam in device_families

@@ -66,7 +66,8 @@ def check_items(items: list[WorkItem]) -> dict:
 
 def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
                    timings=None, fuser=None, resilience=None,
-                   on_exhausted=None, on_item_done=None) -> ScheduleResult:
+                   on_exhausted=None, on_item_done=None,
+                   parallel=None) -> ScheduleResult:
     """Execute ``items`` respecting dependencies; returns results + order.
 
     ``max_workers=0`` runs everything inline on the calling thread in
@@ -92,6 +93,14 @@ def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
     into a topology.  ``on_item_done(key)`` fires after each item lands
     (the checkpoint write-through hook); it runs on the coordinating
     thread in every mode, so callbacks need no locking.
+
+    ``parallel`` (an ``engine.parallel.ParallelConfig``) signals that the
+    items' probe calls shard across the multiprocess pool (the engine
+    wrapped the runner in a ``ParallelRunner`` before building the items).
+    It replaces the GIL-bound thread mode: with ``max_workers=None`` the
+    schedule then runs inline on the coordinator — real concurrency
+    happens row-wise inside the worker processes, where numpy doesn't
+    fight this process's GIL — and results are identical either way.
 
     Raises on unknown dependencies or cycles (both indicate a registry bug,
     not a runtime condition worth limping through).
@@ -144,11 +153,19 @@ def run_work_items(items: list[WorkItem], *, max_workers: int | None = None,
                     out.retries += 1
 
     if max_workers is None:
-        import os
-        cores = os.cpu_count() or 1
-        # numpy probe work mostly holds the GIL: a pool only pays off when
-        # there are spare cores for the pieces that do release it.
-        max_workers = min(8, cores - 2) if cores > 3 else 0
+        if parallel is not None:
+            # Pooled mode: batched probe calls already shard across worker
+            # processes, so coordinator threads would only add GIL traffic.
+            max_workers = 0
+        else:
+            from .parallel import effective_cpu_count
+
+            # numpy probe work mostly holds the GIL: a pool only pays off
+            # when there are spare cores for the pieces that do release it.
+            # Effective cores, not os.cpu_count(): a cgroup CPU quota or
+            # affinity mask must not be answered with 8 fighting threads.
+            cores = effective_cpu_count()
+            max_workers = min(8, cores - 2) if cores > 3 else 0
 
     if max_workers == 0:
         while pending:

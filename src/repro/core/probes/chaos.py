@@ -31,13 +31,19 @@ schedule is a bit-exact passthrough.
 from __future__ import annotations
 
 import hashlib
+import os
 from dataclasses import dataclass
 
 import numpy as np
 
 from ..errors import TransientRunnerError
 
-__all__ = ["ChaosRunner", "FaultSchedule"]
+__all__ = ["ChaosRunner", "FaultSchedule", "build_chaos_runner"]
+
+
+def build_chaos_runner(base_spec, schedule) -> "ChaosRunner":
+    """Rebuild a ``ChaosRunner`` over its base's spec (pool-worker side)."""
+    return ChaosRunner(base_spec.build(), schedule)
 
 
 @dataclass(frozen=True)
@@ -74,6 +80,14 @@ class FaultSchedule:
     #: global probe-call count after which every call raises a
     #: non-transient ``RuntimeError`` — the mid-discovery kill switch
     kill_after: int | None = None
+    #: probe-call count after which the runner hard-exits the *process* —
+    #: but only inside a parallel-pool worker (``MT4G_POOL_WORKER`` env),
+    #: simulating a crashed worker mid-shard.  The coordinator-side twin
+    #: of the same schedule ignores it, so the pool's crash containment
+    #: (respawn + ``TransientRunnerError`` + resilience retry) is what
+    #: gets exercised, and the retry — served by a fresh worker whose
+    #: call count restarts — converges.
+    kill_worker_after: int | None = None
 
     @property
     def value_preserving(self) -> bool:
@@ -133,6 +147,12 @@ class ChaosRunner:
             raise RuntimeError(
                 f"chaos kill: probe call {self.calls} is past the "
                 f"kill_after={sch.kill_after} horizon")
+        if (sch.kill_worker_after is not None
+                and os.environ.get("MT4G_POOL_WORKER")
+                and self.calls > sch.kill_worker_after):
+            # Hard process death, not an exception: the pool must detect
+            # the broken pipe, respawn, and surface a transient fault.
+            os._exit(17)
 
     def _gate(self, kind: str, sig: tuple) -> None:
         """Count one single-probe call; raise per the schedule."""
@@ -346,3 +366,17 @@ class ChaosRunner:
         """Delegated; AttributeError propagates when the base lacks it, so
         ``hasattr`` checks see the base's true capability."""
         return self.base.cores_per_sm
+
+    def runner_spec(self):
+        """Rebuild recipe for pool workers: the base's spec wrapped with
+        this schedule (``FaultSchedule`` is frozen and picklable), or None
+        when the base publishes none.  Fault *gating* counters are
+        per-process, so worker-side fault timing differs from inline —
+        sample values never do (perturbations are signature-keyed)."""
+        fn = getattr(self.base, "runner_spec", None)
+        base_spec = fn() if fn is not None else None
+        if base_spec is None:
+            return None
+        from ..engine.parallel import RunnerSpec
+
+        return RunnerSpec(build_chaos_runner, (base_spec, self.schedule))

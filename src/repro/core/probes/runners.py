@@ -34,7 +34,18 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 __all__ = ["ProbeRunner", "SpaceInfo", "SimRunner", "HostRunner",
-           "sattolo_cycle", "random_cycle"]
+           "sattolo_cycle", "random_cycle", "build_sim_runner",
+           "build_host_runner"]
+
+
+def build_sim_runner(device) -> "SimRunner":
+    """Rebuild a ``SimRunner`` from its device model (pool-worker side)."""
+    return SimRunner(device)
+
+
+def build_host_runner(max_bytes: int, iters: int, seed: int) -> "HostRunner":
+    """Rebuild a ``HostRunner`` from its config scalars (pool-worker side)."""
+    return HostRunner(max_bytes=max_bytes, iters=iters, seed=seed)
 
 
 @dataclass(frozen=True)
@@ -207,6 +218,14 @@ class SimRunner:
     def cores_per_sm(self) -> int:
         return self.device.cores_per_sm
 
+    def runner_spec(self):
+        """Rebuild recipe for pool workers: the device model is the whole
+        state (request-keyed streams live in the device seed), so a worker
+        rebuilt from it is bit-identical to this runner."""
+        from ..engine.parallel import RunnerSpec
+
+        return RunnerSpec(build_sim_runner, (self.device,))
+
 
 # --------------------------------------------------------------------------
 # Host (real CPU) runner
@@ -230,6 +249,7 @@ class HostRunner:
         self._jax = jax
         self.max_bytes = max_bytes
         self.iters = iters
+        self.seed = seed
         self._rng = np.random.default_rng(seed)
         self._chase_cache: dict[int, object] = {}
 
@@ -290,6 +310,15 @@ class HostRunner:
         dispatcher one call site, same as the simulator's vector path."""
         return np.stack([self.pchase(space, int(ab), int(stride), n_samples)
                          for space, ab, stride in requests])
+
+    def runner_spec(self):
+        """Rebuild recipe for pool workers.  Host samples are real wall
+        time, so shards are *statistically* interchangeable with inline
+        rows, never bit-identical — same contract as ``deterministic``."""
+        from ..engine.parallel import RunnerSpec
+
+        return RunnerSpec(build_host_runner,
+                          (self.max_bytes, self.iters, self.seed))
 
     def cold_chase(self, space, array_bytes, stride, n_samples):
         raise NotImplementedError("host runner has no cold-pass control")

@@ -129,7 +129,7 @@ def _parse_elements(raw):
     return list(raw)
 
 
-def resolve_discovery(params: dict, store):
+def resolve_discovery(params: dict, store, parallel=None):
     """Validate a wire-format discovery request and bind it to the store.
 
     Returns ``(descriptor, key, run)`` where ``descriptor`` is the
@@ -138,6 +138,11 @@ def resolve_discovery(params: dict, store):
     will persist under), ``key = request_key(descriptor)``, and ``run()``
     executes the discovery write-through to ``store`` and returns
     ``(topology, timings)``.
+
+    ``parallel`` (an ``engine.parallel.ParallelConfig``, normally the
+    owning ``JobEngine``'s) threads multiprocess probe execution into the
+    run thunk.  It never appears in the descriptor: pooled and inline
+    runs are bit-identical, so they must share a request key.
 
     Raises ``ValueError`` on any malformed field — the HTTP layer maps
     this to a 400 before anything is enqueued.
@@ -185,7 +190,8 @@ def resolve_discovery(params: dict, store):
 
         run = lambda: discover_sim(  # noqa: E731 — close over parsed args
             device, n_samples, elements, store=store, refresh=refresh,
-            budget=budget, gc_policy=gc_policy, survey=survey)
+            budget=budget, gc_policy=gc_policy, survey=survey,
+            parallel=parallel)
 
     elif backend == "pallas":
         from ..core.discover import discover_pallas
@@ -200,7 +206,8 @@ def resolve_discovery(params: dict, store):
                                                budget, survey=survey)
         run = lambda: discover_pallas(  # noqa: E731
             model, n_samples, elements, store=store, refresh=refresh,
-            budget=budget, gc_policy=gc_policy, survey=survey)
+            budget=budget, gc_policy=gc_policy, survey=survey,
+            parallel=parallel)
 
     else:                                                   # host
         from ..core.discover import discover_host
@@ -210,7 +217,7 @@ def resolve_discovery(params: dict, store):
         descriptor = host_request_descriptor(max_bytes, n_samples, quick)
         run = lambda: discover_host(  # noqa: E731
             max_bytes, n_samples, quick, store=store, refresh=refresh,
-            gc_policy=gc_policy)
+            gc_policy=gc_policy, parallel=parallel)
 
     return descriptor, request_key(descriptor), run
 
@@ -317,9 +324,14 @@ class JobEngine:
                  retryable: tuple = (TransientRunnerError,),
                  on_attempt: Callable | None = None,
                  sleep: Callable[[float], None] = time.sleep,
-                 max_history: int = 512):
+                 max_history: int = 512, parallel=None):
         self.store = store
         self.workers = max(1, int(workers))
+        # Multiprocess probe execution (engine/parallel.ParallelConfig):
+        # threaded into every discovery thunk this engine resolves.  All
+        # concurrent jobs share ONE process pool (the config-keyed global
+        # pool), so N remote discoveries never spawn N pools.
+        self.parallel = parallel
         self.max_retries = int(max_retries)
         self.default_timeout_s = default_timeout_s
         self.backoff_base_s = float(backoff_base_s)
@@ -384,7 +396,8 @@ class JobEngine:
         attached to it.  Raises ``ValueError`` on malformed params and
         ``QueueFullError`` when the bounded queue refuses the job.
         """
-        descriptor, key, run = resolve_discovery(params, self.store)
+        descriptor, key, run = resolve_discovery(params, self.store,
+                                                 parallel=self.parallel)
         with self._mutex:
             live = self._active.get(key)
             if live is not None and not live.terminal:

@@ -358,7 +358,7 @@ class TestCheckpointResume:
 
         request = make_request(lambda: chaos, policy)
 
-        def fake_resolve(params, _store):
+        def fake_resolve(params, _store, parallel=None):
             return request.descriptor, request_key(request.descriptor), run
 
         monkeypatch.setattr(jobs_module, "resolve_discovery", fake_resolve)

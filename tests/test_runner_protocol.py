@@ -11,16 +11,27 @@ honored by both the runners and the engine registry.
 Pallas parameters are marked ``slow`` (interpret-mode kernels compile on
 first touch); the fast lane runs the sim/host rows.
 """
+import os
+
 import numpy as np
 import pytest
 
 from repro.core import make_h100_like
+from repro.core.discover import (DiscoveryRequest, discover,
+                                 sim_request_descriptor)
+from repro.core.engine.cache import CachingRunner
+from repro.core.engine.parallel import (ParallelConfig, ParallelPool,
+                                        effective_cpu_count,
+                                        get_global_pool,
+                                        maybe_parallel_runner,
+                                        shutdown_global_pools)
 from repro.core.engine.registry import space_probe_specs
-from repro.core.errors import TransientRunnerError
+from repro.core.errors import Resilience, TransientRunnerError
 from repro.core.probes import (ChaosRunner, FaultSchedule, HostRunner,
                                PallasRunner, ProbeRunner, SimRunner,
                                make_pallas_model, random_cycle,
                                sattolo_cycle)
+from repro.core.topology import topology_equivalent
 
 KIB, MIB = 1024, 1024**2
 
@@ -428,3 +439,211 @@ class TestPermutations:
                     visited.add(cur)
                     cur = int(perm[cur])
                 assert len(visited) == n
+
+
+# --------------------------------------------------------------------------
+# Multiprocess parallel dispatch (engine/parallel.py)
+# --------------------------------------------------------------------------
+# workers=2 with a one-row shard floor forces every multi-row batch to
+# actually split across processes — the strongest form of the sharded ==
+# inline claim.  Explicit ``workers`` bypasses the effective-core floor so
+# the suite exercises real pooling even on a 1-2 core CI box.
+PCFG = ParallelConfig(workers=2, min_rows_per_shard=1)
+
+DEVICE_FAMILIES = ("sharing", "device_memory_latency",
+                   "device_memory_bandwidth")
+
+
+def _shm_residue(prefix):
+    """Shared-memory segment names under /dev/shm carrying ``prefix``.
+
+    Empty on platforms that mount no /dev/shm — the residue backstop is
+    POSIX-shm specific, and so is the leak it guards against.
+    """
+    if not os.path.isdir("/dev/shm"):
+        return []
+    return [n for n in os.listdir("/dev/shm") if n.startswith(prefix)]
+
+
+@pytest.fixture(scope="module")
+def pool():
+    """One dedicated pool for the conformance tests (isolated lifecycle)."""
+    with ParallelPool(PCFG) as p:
+        yield p
+
+
+# Deterministic request-keyed runners: sharding must be byte-for-byte
+# invisible.  The "caching" row wraps the sim runner in ``CachingRunner``,
+# whose ``runner_spec`` delegates to its base — workers rebuild the bare
+# runner and the cache stays coordinator-side.
+DET_RUNNERS = [
+    pytest.param(lambda: SimRunner(make_h100_like(seed=3)), id="sim"),
+    pytest.param(lambda: ChaosRunner(SimRunner(make_h100_like(seed=3)),
+                                     FaultSchedule(seed=1)), id="chaos"),
+    pytest.param(lambda: CachingRunner(SimRunner(make_h100_like(seed=3))),
+                 id="caching"),
+]
+
+
+def _eviction_reqs(runner):
+    """A mixed amount/sharing request grid big enough to shard."""
+    reqs = []
+    amount = [i for i in runner.spaces() if i.supports_amount][0]
+    ab = min(amount.max_bytes // 8, 64 * KIB)
+    reqs += [("amount", amount.name, 0, w, ab) for w in range(4)]
+    sharing = [i for i in runner.spaces() if i.supports_sharing][0]
+    sab = min(sharing.max_bytes // 8, 64 * KIB)
+    reqs += [("sharing", sharing.name, sharing.name, sab),
+             ("sharing", sharing.name, sharing.name, sab // 2)]
+    return reqs
+
+
+class TestParallelDispatch:
+    """Sharded pool execution == inline execution, byte for byte.
+
+    The pool's whole correctness argument rests on request-keyed sampling:
+    each probe row derives its stream from (request, sample index) alone,
+    so *where* the row runs cannot matter.  These tests pin that down for
+    every pooled capability and every spec-publishing runner, then check
+    the failure half of the contract: worker death surfaces as
+    ``TransientRunnerError`` (the resilience currency), the pool respawns,
+    and no shared-memory segment outlives its call.
+    """
+
+    @pytest.mark.parametrize("make", DET_RUNNERS)
+    def test_five_capabilities_bit_identical(self, pool, make):
+        inline = make()
+        pooled = maybe_parallel_runner(make(), PCFG, pool=pool)
+        assert pooled is not inline and pooled.deterministic
+
+        sizes = [16 * KIB + 4 * KIB * i for i in range(9)]
+        assert np.array_equal(inline.pchase_batch("L1", sizes, 32, 7),
+                              pooled.pchase_batch("L1", sizes, 32, 7))
+
+        strides = [8 * (i + 1) for i in range(9)]
+        assert np.array_equal(
+            inline.cold_chase_batch("L1", [64 * KIB] * 9, strides, 7),
+            pooled.cold_chase_batch("L1", [64 * KIB] * 9, strides, 7))
+
+        reqs = ([("L1", 16 * KIB + 4 * KIB * i, 32) for i in range(6)]
+                + [("L2", MIB + 256 * KIB * i, 64) for i in range(3)])
+        assert np.array_equal(inline.pchase_many(reqs, 7),
+                              pooled.pchase_many(reqs, 7))
+        assert np.array_equal(inline.cold_chase_many(reqs, 7),
+                              pooled.cold_chase_many(reqs, 7))
+
+        ev = _eviction_reqs(inline)
+        assert np.array_equal(inline.eviction_many(ev, 7),
+                              pooled.eviction_many(ev, 7))
+
+    def test_batches_actually_shard_across_workers(self, pool):
+        pooled = maybe_parallel_runner(SimRunner(make_h100_like(seed=3)),
+                                       PCFG, pool=pool)
+        calls0, shards0 = pool.calls, pool.shards
+        pooled.pchase_many([("L1", 32 * KIB + 4 * KIB * i, 32)
+                            for i in range(16)], 5)
+        assert pool.calls == calls0 + 1
+        assert pool.shards == shards0 + 2       # both workers took rows
+        # A single-row batch cannot split below one row per shard.
+        pooled.pchase_many([("L1", 32 * KIB, 32)], 5)
+        assert pool.shards == shards0 + 3
+
+    def test_host_structural_through_pool(self, pool):
+        """Measuring runners pool too — structurally, never bit-for-bit."""
+        pooled = maybe_parallel_runner(
+            HostRunner(max_bytes=8 * MIB, iters=1 << 10), PCFG, pool=pool)
+        info, ab = _probe_space(pooled)
+        rows = np.asarray(pooled.pchase_many(
+            [(info.name, ab, 64), (info.name, ab // 2, 64)], 3))
+        assert rows.shape == (2, 3) and rows.dtype == np.float64
+        assert np.all(np.isfinite(rows)) and np.all(rows > 0)
+        # Capability refusals keep their exception type across the pool.
+        with pytest.raises(NotImplementedError):
+            pooled.cold_chase_many([(info.name, ab, 64)], 3)
+
+    def test_caching_over_pool_serves_repeats_locally(self, pool):
+        """Engine ordering: cache above the pool, misses-only cross over."""
+        reqs = [("L1", 16 * KIB + 4 * KIB * i, 32) for i in range(8)]
+        inline = CachingRunner(SimRunner(make_h100_like(seed=3)))
+        cached = CachingRunner(maybe_parallel_runner(
+            SimRunner(make_h100_like(seed=3)), PCFG, pool=pool))
+        assert np.array_equal(inline.pchase_many(reqs, 7),
+                              cached.pchase_many(reqs, 7))
+        calls0 = pool.calls
+        cached.pchase_many(reqs, 7)             # all rows now cached
+        assert pool.calls == calls0
+
+    def test_specless_or_disabled_stays_inline(self):
+        runner = SimRunner(make_h100_like(seed=3))
+        assert maybe_parallel_runner(runner, None) is runner
+        # No RunnerSpec -> identity, even with pooling requested.
+        bare = object()
+        assert maybe_parallel_runner(bare, PCFG) is bare
+        # Below the effective-core floor the auto heuristic opts out...
+        auto = ParallelConfig(min_cores=10 ** 6)
+        assert auto.resolved_workers() == 0
+        assert maybe_parallel_runner(runner, auto) is runner
+        # ...but an explicit worker count always pools.
+        assert ParallelConfig(workers=3, min_cores=10 ** 6)
+        assert ParallelConfig(workers=3,
+                              min_cores=10 ** 6).resolved_workers() == 3
+
+    def test_effective_cpu_count_sane(self):
+        n = effective_cpu_count()
+        assert 1 <= n <= (os.cpu_count() or 1)
+
+    def test_worker_crash_transient_respawn_no_residue(self):
+        """A killed worker costs one TransientRunnerError, nothing else."""
+        cfg = ParallelConfig(workers=1, min_rows_per_shard=1)
+        with ParallelPool(cfg) as crash_pool:
+            prefix = crash_pool._prefix
+            chaos = ChaosRunner(SimRunner(make_h100_like(seed=3)),
+                                FaultSchedule(kill_worker_after=0))
+            pooled = maybe_parallel_runner(chaos, cfg, pool=crash_pool)
+            with pytest.raises(TransientRunnerError):
+                pooled.pchase_many([("L1", 64 * KIB, 32)], 5)
+            assert crash_pool.respawns == 1
+            # Segment released despite the abnormal exit, pool still live.
+            assert _shm_residue(prefix) == []
+            clean = maybe_parallel_runner(SimRunner(make_h100_like(seed=3)),
+                                          cfg, pool=crash_pool)
+            rows = np.asarray(clean.pchase_many([("L1", 64 * KIB, 32)], 5))
+            assert rows.shape == (1, 5)
+        assert _shm_residue(prefix) == []
+
+    def test_worker_kill_discovery_recovers_clean_topology(self):
+        """Mid-round worker death -> resilience retry -> clean topology.
+
+        The chaos schedule kills the worker process a few calls in (the
+        ``MT4G_POOL_WORKER`` guard keeps the coordinator alive); the pooled
+        fused discovery must converge to exactly the inline clean run —
+        everything but the wall-time note, which legitimately differs.
+        """
+        dev = make_h100_like(seed=3)
+        policy = Resilience(max_retries=4, sleep=lambda _s: None)
+
+        def req(make_runner, **kw):
+            return DiscoveryRequest(
+                descriptor=sim_request_descriptor(dev, 9, None),
+                vendor=dev.vendor, model=dev.name,
+                backend=f"simulated:{dev.name}",
+                make_runner=make_runner, n_samples=9,
+                device_families=DEVICE_FAMILIES, fuse=True, **kw)
+
+        clean, _ = discover(req(lambda: SimRunner(dev)))
+
+        sched = FaultSchedule(kill_worker_after=6)
+        shared = get_global_pool(PCFG)
+        respawns0 = shared.respawns
+        try:
+            topo, _ = discover(req(
+                lambda: ChaosRunner(SimRunner(dev), sched),
+                resilience=policy, parallel=PCFG))
+        finally:
+            shutdown_global_pools()
+        assert shared.respawns > respawns0      # kills actually happened
+        assert topology_equivalent(clean, topo)
+        a, b = clean.to_json(), topo.to_json()
+        a.pop("notes"), b.pop("notes")
+        assert a == b
+        assert _shm_residue(f"mt4g{os.getpid()}") == []
